@@ -1,0 +1,22 @@
+"""Fig 10a — worker migration: fused scale-in+scale-out with a single
+topology switch; training stops for < 1 s."""
+from __future__ import annotations
+
+from benchmarks.common import emit, make_trainer, save
+
+
+def run():
+    tr = make_trainer(2, batch=8)
+    tr.run(8)
+    before = tr.throughput(6)
+    rec = tr.migrate(1)
+    tr.run(8)
+    after = tr.throughput(6)
+    emit("fig10a_migration_stop", rec.stop_time * 1e6,
+         f"single-switch, thr-after/before={after / before:.2f}")
+    save("migration", {"before": before, "after": after,
+                       "record": rec.summary()})
+
+
+if __name__ == "__main__":
+    run()

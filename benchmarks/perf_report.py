@@ -1,0 +1,49 @@
+"""Render the §Perf hillclimb log (experiments/hillclimb.jsonl) as a
+before/after table against the baseline rows — the perf-iteration record.
+
+  PYTHONPATH=src python -m benchmarks.perf_report
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR
+
+
+def load(path):
+    p = os.path.join(RESULTS_DIR, path)
+    if not os.path.exists(p):
+        return []
+    with open(p) as f:
+        return [json.loads(l) for l in f]
+
+
+def main():
+    base = {(r["arch"], r["shape"]): r
+            for r in load("baseline_singlepod.jsonl") if r["status"] == "OK"}
+    climbs = load("hillclimb.jsonl")
+    if not climbs:
+        print("no hillclimb records yet")
+        return
+    print(f"{'variant':32s} {'pair':34s} {'Tcomp':>8s} {'Tmem':>8s} "
+          f"{'Tcoll':>8s} {'temp GiB':>9s} {'useful':>7s}")
+    for r in climbs:
+        key = (r["arch"], r["shape"])
+        b = base.get(key)
+        if b:
+            print(f"{'(baseline)':32s} {r['arch'] + ' x ' + r['shape']:34s} "
+                  f"{b['t_compute_s']:8.3f} {b['t_memory_s']:8.3f} "
+                  f"{b['t_collective_s']:8.3f} "
+                  f"{b['temp_bytes'] / 2**30:9.1f} "
+                  f"{b['useful_flops_ratio']:7.3f}")
+            base.pop(key)       # print baseline once per pair
+        print(f"{r.get('variant', '?'):32s} "
+              f"{r['arch'] + ' x ' + r['shape']:34s} "
+              f"{r['t_compute_s']:8.3f} {r['t_memory_s']:8.3f} "
+              f"{r['t_collective_s']:8.3f} {r['temp_bytes'] / 2**30:9.1f} "
+              f"{r['useful_flops_ratio']:7.3f}")
+
+
+if __name__ == "__main__":
+    main()

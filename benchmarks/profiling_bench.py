@@ -1,0 +1,35 @@
+"""Fig 9a — profiling a job over a parallelism range: EDL pays context prep
+once and scales in (cheap); stop-resume restarts per parallelism."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import emit, make_trainer, save
+from repro.core.profiling import profile
+
+
+def run(min_p: int = 1, max_p: int = 4, steps_per_p: int = 6):
+    tr = make_trainer(max_p, batch=12)
+    t0 = time.monotonic()
+    results = profile(tr, min_p, max_p, steps_per_p=steps_per_p)
+    edl_time = time.monotonic() - t0
+
+    # stop-resume profiling: a fresh job (full context prep) per parallelism
+    t0 = time.monotonic()
+    for p in range(max_p, min_p - 1, -1):
+        jax.clear_caches()
+        tr2 = make_trainer(p, batch=12, job_handle=f"prof{p}")
+        tr2.run(steps_per_p)
+    sr_time = time.monotonic() - t0
+
+    emit("fig9a_profile_edl", edl_time * 1e6,
+         f"edl/sr-time-ratio={edl_time / sr_time:.2f}")
+    emit("fig9a_profile_stop_resume", sr_time * 1e6, "-")
+    save("profiling", {"edl_s": edl_time, "sr_s": sr_time,
+                       "per_p": {str(k): v for k, v in results.items()}})
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Roofline report: reads the dry-run JSONL (experiments/baseline_*.jsonl,
+experiments/hillclimb.jsonl) and prints the per-(arch x shape) three-term
+roofline table with the dominant bottleneck — the §Roofline deliverable."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR, emit
+
+BASE = os.path.join(RESULTS_DIR, "baseline_singlepod.jsonl")
+
+
+def load(path):
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return [json.loads(l) for l in f]
+
+
+def run():
+    rows = load(BASE)
+    if not rows:
+        print("# roofline: run `python -m repro.launch.dryrun --all "
+              "--out experiments/baseline_singlepod.jsonl` first")
+        return {}
+    print(f"# {'arch':24s} {'shape':12s} {'Tcomp(s)':>9s} {'Tmem(s)':>9s} "
+          f"{'Tcoll(s)':>9s} {'dom':>5s} {'useful':>7s}")
+    for r in rows:
+        if r["status"] != "OK":
+            print(f"# {r['arch']:24s} {r['shape']:12s} SKIP "
+                  f"({r.get('reason', '')[:40]})")
+            continue
+        print(f"# {r['arch']:24s} {r['shape']:12s} {r['t_compute_s']:9.4f} "
+              f"{r['t_memory_s']:9.4f} {r['t_collective_s']:9.4f} "
+              f"{r['dominant'][:4]:>5s} {r['useful_flops_ratio']:7.3f}")
+        dom_t = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        emit(f"roofline_{r['arch']}_{r['shape']}", dom_t * 1e6,
+             f"dom={r['dominant']};useful={r['useful_flops_ratio']:.3f}")
+    return {"rows": len(rows)}
+
+
+if __name__ == "__main__":
+    run()

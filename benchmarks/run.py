@@ -1,0 +1,56 @@
+import os
+
+# The elasticity benchmarks need a multi-device host platform (the bench IS
+# the launcher — library code and tests never set this globally).
+if "--xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=8")
+
+"""Benchmark harness — one function per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run fig7 tab4  # filter by token
+
+Prints ``name,us_per_call,derived`` CSV lines; details land in
+experiments/bench_*.json. Paper-table mapping in DESIGN.md §8.
+"""
+import sys
+import time
+import traceback
+
+BENCHES = [
+    ("fig7_static_parallelism", "benchmarks.static_parallelism"),
+    ("tab2_tab3_fig5_scaling_overhead", "benchmarks.scaling_overhead"),
+    ("fig8_resource_loss", "benchmarks.resource_loss"),
+    ("fig9a_profiling", "benchmarks.profiling_bench"),
+    ("fig9b_straggler", "benchmarks.straggler_bench"),
+    ("fig10a_migration", "benchmarks.migration_bench"),
+    ("fig10b_transient", "benchmarks.transient_bench"),
+    ("fig11_fig12_tab4_scheduling", "benchmarks.scheduling_bench"),
+    ("roofline", "benchmarks.roofline"),
+]
+
+
+def main() -> None:
+    filters = [a for a in sys.argv[1:] if not a.startswith("-")]
+    failures = 0
+    for name, module in BENCHES:
+        if filters and not any(f in name for f in filters):
+            continue
+        print(f"# === {name} ===", flush=True)
+        t0 = time.monotonic()
+        try:
+            mod = __import__(module, fromlist=["run"])
+            mod.run()
+        except Exception:
+            failures += 1
+            print(f"# {name} FAILED:\n{traceback.format_exc()}", flush=True)
+        print(f"# === {name} done in {time.monotonic() - t0:.1f}s ===",
+              flush=True)
+    if failures:
+        raise SystemExit(f"{failures} benchmark(s) failed")
+
+
+if __name__ == '__main__':
+    main()

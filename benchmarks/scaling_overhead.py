@@ -1,0 +1,46 @@
+"""Table 2 + Table 3 + Fig 5 — stopping time and end-to-end time of scaling,
+EDL (stop-free / graceful exit) vs stop-resume, with the cost decomposition
+(context-prep vs switch)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, make_trainer, save
+from repro.core import stop_resume_rescale
+
+
+def run():
+    tr = make_trainer(4, batch=20)
+    tr.run(5)
+
+    tr.scale_out(1)                       # 4 -> 5 (the paper's experiment)
+    rec_out = tr.wait_for_scaling()
+    tr.run(3)
+    rec_in = tr.scale_in(1, block=True)   # 5 -> 4
+    tr.run(3)
+    rec_sr = stop_resume_rescale(tr, 5)   # stop-resume 4 -> 5
+    tr.run(3)
+
+    rows = {
+        "edl_scale_out": rec_out.summary(),
+        "edl_scale_in": rec_in.summary(),
+        "stop_resume": rec_sr.summary(),
+        "decomposition": {
+            "edl_out_context_prep_s": rec_out.prep_time,
+            "edl_out_stop_s": rec_out.stop_time,
+            "sr_total_stop_s": rec_sr.stop_time,
+        },
+    }
+    ratio = rec_sr.stop_time / max(rec_out.stop_time, 1e-6)
+    emit("table2_stop_time_edl_out", rec_out.stop_time * 1e6,
+         f"steps_during_prep={rec_out.steps_during_prep}")
+    emit("table2_stop_time_edl_in", rec_in.stop_time * 1e6, "graceful-exit")
+    emit("table2_stop_time_stop_resume", rec_sr.stop_time * 1e6,
+         f"sr/edl-stop-ratio={ratio:.1f}x")
+    emit("table3_e2e_edl_out", rec_out.e2e_time * 1e6,
+         f"prep_hidden={rec_out.prep_time:.2f}s")
+    emit("table3_e2e_edl_in", rec_in.e2e_time * 1e6, "-")
+    save("scaling_overhead", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

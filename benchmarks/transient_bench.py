@@ -1,0 +1,78 @@
+"""Fig 10b — using transient idle resources: a job on 2 persistent slices
+sees 1 extra slice become idle at t=0 and revoked at t = 0.7 * interval.
+
+Methodology on a single-core host: all logical devices share one CPU, so
+running at p=3 cannot physically process more samples/s than p=2. The bench
+therefore measures the REAL scaling overheads live (background-prep e2e,
+stop windows, stop-resume restart time from actual ScalingRecords) and
+combines them with the resource model the paper's GPUs satisfy (throughput
+proportional to slices at small p). Schemes:
+
+  Baseline     2 slices the whole interval.
+  EDL          2 slices while prep runs in background (stop-free), 3 after
+               the switch, graceful-exit at revocation.
+  stop-resume  ALL slices idle during each restart window.
+  Ideal        instant switches.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, make_trainer, save
+from repro.core import stop_resume_rescale
+
+
+def run(interval_s: float = 240.0):
+    """Paper setup: 4 persistent slices + 1 transient, revoked at 70% of a
+    4-minute idle interval (§6.2)."""
+    revoke_at = 0.7 * interval_s
+
+    # live-measured overheads
+    tr = make_trainer(4, batch=20, job_handle="probe")
+    tr.run(6)
+    rate4 = tr.throughput(4)        # samples/s at p=4 on this host
+    rate1 = rate4 / 4.0             # per-slice rate (resource model)
+    tr.scale_out(1)
+    rec_out = tr.wait_for_scaling()
+    rec_in = tr.scale_in(1, block=True)
+    rec_sr = stop_resume_rescale(tr, 5)
+    stop_resume_rescale(tr, 4)
+
+    # background prep on this 1-core host is inflated by contention with the
+    # training it overlaps; the model uses the foreground-measured prep (what
+    # a dedicated new-worker host would take), raw number kept in the JSON
+    prep = rec_sr.prep_time
+    prep_raw = rec_out.e2e_time
+    stop_out = rec_out.stop_time
+    stop_in = rec_in.stop_time
+    sr_e2e = rec_sr.e2e_time
+
+    def clamp(x):
+        return max(0.0, x)
+
+    base = 4 * rate1 * interval_s
+    ideal = 5 * rate1 * revoke_at + 4 * rate1 * (interval_s - revoke_at)
+    # EDL: 4 slices during prep (training continues!), brief stop, 5 slices
+    # until revocation, graceful exit, 4 slices for the tail
+    t5 = clamp(revoke_at - min(prep, revoke_at) - stop_out)
+    edl = (4 * rate1 * min(prep, revoke_at) + 5 * rate1 * t5 +
+           4 * rate1 * clamp(interval_s - revoke_at - stop_in))
+    # stop-resume: everyone idles during each restart
+    t5_sr = clamp(revoke_at - min(sr_e2e, revoke_at))
+    sr = (5 * rate1 * t5_sr +
+          4 * rate1 * clamp(interval_s - revoke_at - sr_e2e))
+
+    rows = {"baseline": base, "edl": edl, "stop_resume": sr, "ideal": ideal,
+            "edl_frac": edl / ideal, "sr_frac": sr / ideal,
+            "base_frac": base / ideal, "interval_s": interval_s,
+            "measured": {"prep_s": prep, "prep_contended_s": prep_raw,
+                         "stop_out_s": stop_out,
+                         "stop_in_s": stop_in, "sr_e2e_s": sr_e2e,
+                         "rate_per_slice": rate1}}
+    emit("fig10b_transient", 0.0,
+         f"edl/ideal={edl / ideal:.2f} sr/ideal={sr / ideal:.2f} "
+         f"base/ideal={base / ideal:.2f} (paper: edl>=0.97)")
+    save("transient", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,75 @@
+"""Checkpointing: train state (params + optimizer moments + step) plus the
+dynamic-data-pipeline state (partition permutation + progress), so a restored
+job resumes exactly-once data consumption — EDL §4.3's requirement that the
+partition permutation list and worker progress are checkpointed too.
+
+Format: one .npz for arrays (flattened pytree paths as keys) + a JSON sidecar
+for pipeline/meta state. Consistent-recovery (§4.2) writes these periodically.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = {}
+
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                walk(f"{prefix}/{k}" if prefix else str(k), node[k])
+        else:
+            flat[prefix] = np.asarray(node)
+    walk("", tree)
+    return flat
+
+
+def _unflatten_from_paths(flat: dict):
+    tree: dict = {}
+    for path, val in flat.items():
+        parts = path.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return tree
+
+
+def save_checkpoint(path: str, state, *, step: int | None = None,
+                    pipeline_state: dict | None = None,
+                    extra: dict | None = None):
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten_with_paths(jax.device_get(state))
+    np.savez(os.path.join(path, "state.npz"), **flat)
+    meta = {"step": int(step if step is not None
+                        else np.asarray(flat.get("step", 0))),
+            "pipeline": pipeline_state, "extra": extra or {}}
+    tmp = os.path.join(path, "meta.json.tmp")
+    with open(tmp, "w") as f:
+        json.dump(meta, f)
+    os.replace(tmp, os.path.join(path, "meta.json"))
+
+
+def load_checkpoint(path: str, *, like=None):
+    """Returns (state_tree_of_np_arrays, meta). If ``like`` is given, arrays
+    are cast/validated against its shapes/dtypes."""
+    with np.load(os.path.join(path, "state.npz")) as z:
+        flat = {k: z[k] for k in z.files}
+    state = _unflatten_from_paths(flat)
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    if like is not None:
+        ref_flat = _flatten_with_paths(like)
+        for k, ref in ref_flat.items():
+            got = flat.get(k)
+            assert got is not None, f"missing {k} in checkpoint"
+            assert got.shape == ref.shape, \
+                f"{k}: shape {got.shape} != {ref.shape}"
+        state = jax.tree.map(
+            lambda ref, got: np.asarray(got, dtype=ref.dtype)
+            if hasattr(ref, "dtype") else got, like, state)
+    return state, meta

@@ -1,0 +1,11 @@
+from repro.core.api import EDLJob
+from repro.core.coordination import CoordinationStore
+from repro.core.elastic_runtime import ElasticTrainer
+from repro.core.election import LeaderElection
+from repro.core.membership import Membership, StragglerDetector
+from repro.core.scaling import Busy, ScalingController, ScalingRecord
+from repro.core.stop_resume import stop_resume_rescale
+
+__all__ = ["EDLJob", "CoordinationStore", "ElasticTrainer", "LeaderElection",
+           "Membership", "StragglerDetector", "Busy", "ScalingController",
+           "ScalingRecord", "stop_resume_rescale"]

@@ -1,0 +1,344 @@
+"""ElasticTrainer — EDL's elasticity on a JAX device mesh.
+
+The TPU-native mapping (DESIGN.md §2/§4): a *worker* is one data-parallel
+slice of a ``(data, model)`` mesh; elasticity resizes the ``data`` axis.
+The global batch is constant at every parallelism (per-slice batch =
+global / p), so a training step computes the same math regardless of p.
+
+Stop-free scale-out: the expensive execution-context preparation on TPU is
+the XLA compile for the new mesh — it runs in a background thread via AOT
+``jit(...).lower().compile()`` while the current executable keeps stepping.
+When ready, the leader schedules the switch at mini-batch ``t_cur + k``
+(k = ceil(T_allowance / T_batch), T_allowance = 500 ms — paper default); at
+that boundary the train state is resharded onto the new mesh (the "model
+broadcast") and the executable swapped. Scale-in (graceful exit) returns the
+exiting slices' partition remainders to the dynamic data pipeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import threading
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.coordination import CoordinationStore
+from repro.core.election import LeaderElection
+from repro.core.membership import Membership, StragglerDetector
+from repro.core.scaling import Busy, Phase, ScalingController, ScalingRecord
+from repro.data.pipeline import DynamicDataPipeline
+from repro.data.synthetic import SyntheticTokenDataset
+from repro.data.worker import WorkerDataIterator
+from repro.launch.mesh import make_mesh
+from repro.optim import Optimizer, adamw
+from repro.training.step import batch_sharding, init_train_state, \
+    make_train_step, state_sharding
+
+TIME_ALLOWANCE_S = 0.5      # paper's T_a
+
+
+@dataclasses.dataclass
+class ExecHandle:
+    """Everything tied to one parallelism: the 'communication topology'."""
+    p: int
+    mesh: object
+    step_fn: Callable
+    state_shardings: object
+    batch_shardings: object
+
+
+class ElasticTrainer:
+    def __init__(self, cfg, *, global_batch: int, seq_len: int,
+                 init_parallelism: int, model_parallel: int = 1,
+                 optimizer: Optimizer | None = None,
+                 dataset: SyntheticTokenDataset | None = None,
+                 n_samples: int = 1 << 14, d_partitions: int = 64,
+                 job_handle: str = "job0",
+                 store: CoordinationStore | None = None, seed: int = 0,
+                 devices=None, use_aot: bool = True):
+        self.cfg = cfg
+        self.global_batch = global_batch
+        self.seq_len = seq_len
+        self.model_parallel = model_parallel
+        self.optimizer = optimizer or adamw(1e-3)
+        self.devices = list(devices if devices is not None else jax.devices())
+        self.job_handle = job_handle
+        self.store = store or CoordinationStore()
+        self.use_aot = use_aot
+
+        # data substrate (leader-side pipeline + per-slice iterators)
+        self.dataset = dataset or SyntheticTokenDataset(
+            n_samples, seq_len, cfg.vocab, seed=seed,
+            d_model=cfg.d_model, embeds=(cfg.frontend == "embeds"))
+        self.pipeline = DynamicDataPipeline(self.dataset.n_samples,
+                                            d_partitions, seed=seed)
+
+        # control plane
+        self.membership = Membership()
+        self.controller = ScalingController()
+        self.straggler_detector = StragglerDetector()
+        self.injected_delay: dict[str, float] = {}
+
+        # bring up the initial topology (this is job launch, not scaling)
+        self.p = init_parallelism
+        self._worker_seq = 0
+        self.worker_ids: list[str] = []
+        self.iters: dict[str, WorkerDataIterator] = {}
+        for _ in range(init_parallelism):
+            self._add_worker()
+        self.election = LeaderElection(self.store, job_handle,
+                                       self.worker_ids[0])
+        res = self.election.elect()
+        self.leader_id = res.leader_id
+
+        self.exec = self._build_exec(init_parallelism)
+        key = jax.random.PRNGKey(seed)
+        with self.exec.mesh:
+            state = init_train_state(cfg, self.optimizer, key)
+        self.state = jax.device_put(state, self.exec.state_shardings)
+
+        self.step_idx = 0
+        self.samples_seen = 0
+        self.step_time_ema: float | None = None
+        self.metrics_log: list[dict] = []
+        self.throughput_log: list[tuple[float, int, float]] = []
+        self._prep_thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------- workers
+    def _add_worker(self) -> str:
+        wid = f"w{self._worker_seq}"
+        self._worker_seq += 1
+        self.worker_ids.append(wid)
+        self.iters[wid] = WorkerDataIterator(wid, self.pipeline, self.dataset,
+                                             prefetch=False)
+        self.membership.register(wid, len(self.worker_ids) - 1)
+        return wid
+
+    def _remove_worker(self, wid: str, *, dead: bool = False):
+        if dead:
+            self.pipeline.release(wid, dead=True)
+        else:
+            self.iters[wid].graceful_exit()     # return data remainder
+        self.worker_ids.remove(wid)
+        del self.iters[wid]
+        self.membership.remove(wid)
+        self.straggler_detector.reset(wid)
+
+    # ---------------------------------------------------------- executables
+    def _build_exec(self, p: int) -> ExecHandle:
+        """Execution-context preparation for parallelism p: mesh + shardings
+        + AOT-compiled step. This is the cost stop-free scaling hides."""
+        mesh = make_mesh(p, self.model_parallel, devices=np.array(
+            self.devices[: p * self.model_parallel]))
+        st_sh = state_sharding(self.cfg, mesh, self.optimizer)
+        from repro.configs.base import InputShape, input_specs
+        shape = InputShape("rt", self.seq_len, self.global_batch, "train")
+        specs = input_specs(self.cfg, shape)
+        specs.pop("cache", None)
+        b_sh = batch_sharding(self.cfg, mesh, specs)
+        fn = make_train_step(self.cfg, self.optimizer)
+        if self.use_aot:
+            with mesh:
+                compiled = jax.jit(
+                    fn, in_shardings=(st_sh, b_sh),
+                    out_shardings=(st_sh, None)).lower(
+                        _abstract_state(self.cfg, self.optimizer), specs
+                    ).compile()
+            step_fn = compiled
+        else:
+            step_fn = jax.jit(fn, in_shardings=(st_sh, b_sh),
+                              out_shardings=(st_sh, None))
+        return ExecHandle(p, mesh, step_fn, st_sh, b_sh)
+
+    # -------------------------------------------------------------- stepping
+    def _assemble_batch(self) -> dict | None:
+        """Draw global_batch samples as p per-worker draws (the per-worker
+        data flow of the paper; progress offsets update leader-side).
+
+        Epoch tails: draws never cross an epoch boundary, so the final batch
+        of an epoch may come up short — it is padded by cycling the drawn
+        samples (recorded sample_ids stay un-padded, preserving the
+        exactly-once accounting; only the SGD step sees a few duplicates at
+        the boundary, the paper-accepted consistency semantics)."""
+        per = self.global_batch // self.p
+        parts = []
+        for wid in self.worker_ids:
+            d = self.iters[wid].draw(per)
+            if d is not None:
+                parts.append(d)
+        if not parts:
+            return None         # epoch boundary, nothing drawn
+        batch = {k: np.concatenate([p_[k] for p_ in parts])
+                 for k in parts[0]}
+        self._last_sample_ids = batch.pop("sample_ids")
+        n = len(self._last_sample_ids)
+        if n < self.global_batch:
+            reps = -(-self.global_batch // n)
+            batch = {k: np.concatenate([v] * reps)[:self.global_batch]
+                     for k, v in batch.items()}
+        if self.cfg.frontend == "embeds":
+            batch = {"embeds": batch["embeds"], "labels": batch["labels"]}
+        return batch
+
+    def step(self) -> dict | None:
+        """One synchronous mini-batch across the current topology."""
+        t0 = time.monotonic()
+        batch = self._assemble_batch()
+        if batch is None:
+            return None
+        dev_batch = jax.device_put(batch, self.exec.batch_shardings)
+        self.state, metrics = self.exec.step_fn(self.state, dev_batch)
+        jax.block_until_ready(metrics["loss"])
+        # simulated per-worker sync times (straggler injection adds delay)
+        base = time.monotonic() - t0
+        sync_times = {wid: base + self.injected_delay.get(wid, 0.0)
+                      for wid in self.worker_ids}
+        slowest = max(sync_times.values())
+        if slowest > base:      # synchronous training waits for the straggler
+            time.sleep(min(slowest - base, 0.05))
+        t_step = time.monotonic() - t0
+        self.step_idx += 1
+        self.samples_seen += self.global_batch
+        self.step_time_ema = (t_step if self.step_time_ema is None
+                              else 0.7 * self.step_time_ema + 0.3 * t_step)
+        for wid in self.worker_ids:
+            self.membership.sync(wid, self.step_idx, sync_times[wid])
+        self.throughput_log.append(
+            (time.monotonic(), self.p, self.global_batch / t_step))
+        out = {k: float(v) for k, v in metrics.items()}
+        out.update(step=self.step_idx, p=self.p, step_time=t_step)
+        self.metrics_log.append(out)
+        self.notify_batch_end()
+        return out
+
+    # --------------------------------------------------- EDL control plane
+    def notify_batch_end(self):
+        """The paper's notify_batch_end(): scaling switches happen only at
+        mini-batch boundaries; this is where a scheduled switch commits."""
+        flagged = self.straggler_detector.observe(
+            {w.worker_id: (w.step_times[-1] if w.step_times else 0.0)
+             for w in self.membership.workers.values()})
+        self._flagged_stragglers = flagged
+        plan = self.controller.plan
+        if plan is not None and plan.ready and \
+                self.step_idx >= plan.switch_step:
+            self._commit_switch()
+
+    def scale_out(self, n_new: int = 1, *, block: bool = False
+                  ) -> ScalingRecord | None:
+        """sclae_out(): add n_new data-parallel slices, stop-free."""
+        return self._request("scale_out", self.p + n_new, block=block)
+
+    def scale_in(self, n_remove: int = 1, *, victims: list[str] | None = None,
+                 block: bool = False) -> ScalingRecord | None:
+        """sclae_in(): remove slices via graceful exit. Raises Busy (the
+        paper's RETRY) if another scaling op is in flight."""
+        if self.controller.phase is not Phase.IDLE:
+            raise Busy("scaling in flight; retry later")
+        if self.p - n_remove < 1:
+            raise ValueError(f"cannot scale below 1 (p={self.p})")
+        return self._request("scale_in", self.p - n_remove, block=block,
+                             victims=victims)
+
+    def migrate(self, n: int = 1, *, block: bool = True):
+        """Fused scale-in + scale-out: one topology switch (§5.2)."""
+        return self._request("migrate", self.p, block=block,
+                             victims=self.worker_ids[-n:], n_join=n)
+
+    def _request(self, op: str, target_p: int, *, block: bool,
+                 victims=None, n_join: int | None = None):
+        avail = len(self.devices) // self.model_parallel
+        if target_p > avail:
+            raise ValueError(f"need {target_p} slices, have {avail}")
+        if self.global_batch % target_p:
+            raise ValueError(f"global batch {self.global_batch} not "
+                             f"divisible by p={target_p}")
+        plan = self.controller.admit(op, self.p, target_p)  # raises Busy
+        plan.exiting = tuple(victims or ())
+        plan.joining = ("new",) * (n_join or max(0, target_p - self.p))
+        steps_before = self.step_idx
+
+        def prepare():
+            handle = self._build_exec(target_p)
+            k = max(1, math.ceil(TIME_ALLOWANCE_S /
+                                 max(self.step_time_ema or 0.01, 1e-4)))
+            plan.record.steps_during_prep = self.step_idx - steps_before
+            self.controller.prepared(self.step_idx + k, handle)
+
+        if block:
+            prepare()
+            # commit at the next boundary manually
+            while self.controller.phase is Phase.SCHEDULED:
+                if self.step() is None:
+                    self._commit_switch()
+            return self.controller.history[-1]
+        self._prep_thread = threading.Thread(target=prepare, daemon=True)
+        self._prep_thread.start()
+        return None
+
+    def _commit_switch(self):
+        """The brief stop: reshard state (model broadcast) + swap topology."""
+        plan = self.controller.plan
+        self.controller.begin_switch()
+        handle: ExecHandle = plan.exec_handle
+        op = plan.record.op
+        # graceful exit of victims (their data remainder returns to the pool)
+        if op in ("scale_in", "migrate"):
+            victims = list(plan.exiting) or self.worker_ids[handle.p:]
+            leader_leaving = self.leader_id in victims
+            for wid in victims:
+                self._remove_worker(wid)
+            if leader_leaving:
+                self.election.resign()
+                self.election = LeaderElection(self.store, self.job_handle,
+                                               self.worker_ids[0])
+                self.leader_id = self.election.elect().leader_id
+        while len(self.worker_ids) < handle.p:
+            self._add_worker()
+        # model broadcast == reshard onto the new mesh
+        self.state = jax.device_put(self.state, handle.state_shardings)
+        jax.block_until_ready(jax.tree.leaves(self.state)[0])
+        self.exec = handle
+        self.p = handle.p
+        rec = self.controller.complete()
+        return rec
+
+    # ------------------------------------------------------------- helpers
+    def run(self, n_steps: int, *, on_step=None):
+        done = 0
+        while done < n_steps:
+            m = self.step()
+            if m is None:       # epoch rolled; pipeline restarts itself
+                if self.pipeline.exhausted:
+                    break
+                continue
+            done += 1
+            if on_step:
+                on_step(m)
+        return done
+
+    def wait_for_scaling(self, max_steps: int = 10_000):
+        """Keep training (stop-free!) until the in-flight scaling commits."""
+        steps = 0
+        while self.controller.phase is not Phase.IDLE and steps < max_steps:
+            m = self.step()
+            if m is None and self.controller.phase is Phase.SCHEDULED:
+                self._commit_switch()
+            steps += 1
+        return self.controller.history[-1] if self.controller.history else None
+
+    def throughput(self, last_n: int = 20) -> float:
+        xs = self.throughput_log[-last_n:]
+        return float(np.mean([t for _, _, t in xs])) if xs else 0.0
+
+
+def _abstract_state(cfg, optimizer):
+    from repro.training.step import state_shape_structs
+    s = state_shape_structs(cfg, optimizer)
+    if optimizer.slots < 2:
+        s["opt"].pop("nu", None)
+    return s

@@ -1,0 +1,33 @@
+"""profile(job, min_p, max_p) — EDL §5.2.
+
+Start at max_p and *scale in* step by step (scale-in is nearly free), paying
+execution-context preparation once instead of once per parallelism as
+stop-resume profiling does. Returns throughput + GPU-efficiency per p.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def profile(trainer, min_p: int, max_p: int, *, steps_per_p: int = 10
+            ) -> dict[int, dict]:
+    """Measure throughput/efficiency for p in [min_p, max_p] via a scale-in
+    sweep on a live trainer (must currently run at >= max_p or be scalable
+    out to max_p)."""
+    results: dict[int, dict] = {}
+    if trainer.p < max_p:
+        trainer.scale_out(max_p - trainer.p)
+        trainer.wait_for_scaling()
+    p = max_p
+    while True:
+        trainer.run(steps_per_p)
+        thr = trainer.throughput(steps_per_p - 2)
+        results[p] = {"throughput": thr, "per_gpu": thr / p}
+        if p <= min_p:
+            break
+        trainer.scale_in(1, block=True)
+        p = trainer.p
+    best_per_gpu = max(r["per_gpu"] for r in results.values())
+    for r in results.values():
+        r["efficiency"] = r["per_gpu"] / best_per_gpu
+    return results

@@ -1,0 +1,118 @@
+"""Scaling state machine + event records (EDL §4.2).
+
+Scaling operations commit sequentially: a request arriving while another is in
+flight gets RETRY (the paper's behaviour). Each operation is decomposed into
+the paper's cost phases so benchmarks can reproduce Fig 5/6/8:
+
+  context-prep   — background executable build for the target parallelism
+                   (stop-free: training continues throughout)
+  topo-switch    — swap to the new mesh/executable at the scheduled step
+  model-broadcast— reshard the train state onto the new mesh
+
+``stop_time`` counts only the wall time existing workers are actually paused
+(topo-switch + broadcast); ``e2e_time`` includes the hidden preparation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import time
+
+
+class Phase(enum.Enum):
+    IDLE = "idle"
+    PREPARING = "preparing"
+    SCHEDULED = "scheduled"
+
+
+class Busy(Exception):
+    """RETRY: a scaling operation is already in flight (paper §3.1)."""
+
+
+@dataclasses.dataclass
+class ScalingRecord:
+    op: str                     # scale_out | scale_in | migrate | stop_resume
+    from_p: int
+    to_p: int
+    t_request: float = 0.0
+    t_prep_start: float = 0.0
+    t_prep_end: float = 0.0
+    t_switch_start: float = 0.0
+    t_switch_end: float = 0.0
+    steps_during_prep: int = 0  # stop-free evidence: training kept going
+    switch_step: int = -1
+
+    @property
+    def prep_time(self) -> float:
+        return self.t_prep_end - self.t_prep_start
+
+    @property
+    def stop_time(self) -> float:
+        return self.t_switch_end - self.t_switch_start
+
+    @property
+    def e2e_time(self) -> float:
+        return self.t_switch_end - self.t_request
+
+    def summary(self) -> dict:
+        return {"op": self.op, "from_p": self.from_p, "to_p": self.to_p,
+                "prep_s": round(self.prep_time, 4),
+                "stop_s": round(self.stop_time, 4),
+                "e2e_s": round(self.e2e_time, 4),
+                "steps_during_prep": self.steps_during_prep,
+                "switch_step": self.switch_step}
+
+
+@dataclasses.dataclass
+class SwitchPlan:
+    target_p: int
+    record: ScalingRecord
+    switch_step: int = -1       # set when prep completes (t_cur + k)
+    ready: bool = False
+    exec_handle: object = None  # (mesh, compiled fns, shardings)
+    exiting: tuple = ()         # worker ids leaving (scale-in / migrate)
+    joining: tuple = ()
+
+
+class ScalingController:
+    """Sequential admission + phase tracking for one job."""
+
+    def __init__(self, clock=time.monotonic):
+        self.clock = clock
+        self.phase = Phase.IDLE
+        self.plan: SwitchPlan | None = None
+        self.history: list[ScalingRecord] = []
+
+    def admit(self, op: str, from_p: int, to_p: int) -> SwitchPlan:
+        if self.phase is not Phase.IDLE:
+            raise Busy(f"scaling {self.plan.record.op} in flight")
+        rec = ScalingRecord(op, from_p, to_p, t_request=self.clock())
+        self.plan = SwitchPlan(to_p, rec)
+        self.phase = Phase.PREPARING
+        rec.t_prep_start = self.clock()
+        return self.plan
+
+    def prepared(self, switch_step: int, exec_handle):
+        assert self.phase is Phase.PREPARING
+        self.plan.record.t_prep_end = self.clock()
+        self.plan.switch_step = switch_step
+        self.plan.record.switch_step = switch_step
+        self.plan.exec_handle = exec_handle
+        self.plan.ready = True
+        self.phase = Phase.SCHEDULED
+
+    def begin_switch(self):
+        assert self.phase is Phase.SCHEDULED
+        self.plan.record.t_switch_start = self.clock()
+
+    def complete(self) -> ScalingRecord:
+        rec = self.plan.record
+        rec.t_switch_end = self.clock()
+        self.history.append(rec)
+        self.plan = None
+        self.phase = Phase.IDLE
+        return rec
+
+    def abort(self):
+        self.plan = None
+        self.phase = Phase.IDLE

@@ -1,0 +1,68 @@
+"""Stop-resume baseline (the approach EDL replaces, §2.2).
+
+Checkpoint the job, tear everything down (state, executables, compilation
+cache), rebuild at the new parallelism from scratch, restore, resume. ALL
+workers are stopped for the whole duration — the paper's Table-2 comparison.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.core.scaling import ScalingRecord
+
+
+def stop_resume_rescale(trainer, target_p: int,
+                        *, checkpoint_dir: str | None = None
+                        ) -> ScalingRecord:
+    """Adjust ``trainer`` to ``target_p`` the stop-resume way. Training is
+    fully stopped from t_request to t_switch_end (stop_time == e2e_time)."""
+    from repro.core.scaling import Busy
+    if trainer.controller.plan is not None:
+        raise Busy("scaling already in flight; retry")   # paper: RETRY
+    rec = ScalingRecord("stop_resume", trainer.p, target_p,
+                        t_request=time.monotonic())
+    rec.t_prep_start = rec.t_request
+    ckpt = checkpoint_dir or tempfile.mkdtemp(prefix="edl_sr_")
+
+    # 1. checkpoint and stop
+    save_checkpoint(ckpt, trainer.state, step=trainer.step_idx,
+                    pipeline_state=trainer.pipeline.state_dict())
+    # 2. tear down: drop state, executables, compilation cache — a restarted
+    #    process pays context preparation from zero.
+    trainer.state = None
+    trainer.exec = None
+    jax.clear_caches()
+
+    # 3. rebuild execution context at the new parallelism (foreground!)
+    while len(trainer.worker_ids) > target_p:
+        trainer._remove_worker(trainer.worker_ids[-1])
+    while len(trainer.worker_ids) < target_p:
+        trainer._add_worker()
+    handle = trainer._build_exec(target_p)
+    rec.t_prep_end = time.monotonic()
+
+    # 4. restore model + pipeline state
+    rec.t_switch_start = rec.t_prep_end
+    from repro.training.step import init_train_state
+    with handle.mesh:
+        template = init_train_state(trainer.cfg, trainer.optimizer,
+                                    jax.random.PRNGKey(0))
+    restored, meta = load_checkpoint(ckpt, like=jax.device_get(template))
+    trainer.state = jax.device_put(restored, handle.state_shardings)
+    jax.block_until_ready(jax.tree.leaves(trainer.state)[0])
+    trainer.pipeline.load_state_dict(meta["pipeline"])
+    for it in trainer.iters.values():
+        it.assignment = None
+        it._buf = None
+    trainer.exec = handle
+    trainer.p = target_p
+    rec.t_switch_end = time.monotonic()
+    # stop-resume stops everything: stop time is the whole window
+    rec.t_switch_start = rec.t_request
+    trainer.controller.history.append(rec)
+    return rec

@@ -1,0 +1,6 @@
+from repro.data.partition import Partition, PartitionAssignment
+from repro.data.pipeline import DynamicDataPipeline, StaticAllocationPipeline
+from repro.data.synthetic import SyntheticTokenDataset
+
+__all__ = ["Partition", "PartitionAssignment", "DynamicDataPipeline",
+           "StaticAllocationPipeline", "SyntheticTokenDataset"]

@@ -1,0 +1,46 @@
+"""Logical dataset partitions (metadata only — the dataset is never physically
+split, exactly as EDL §4.3: partitioning records names/offsets).
+
+A partition is a contiguous range of sample indices; `d` is chosen much larger
+than any plausible worker count while keeping partitions large enough for
+high-bandwidth sequential reads.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Partition:
+    pid: int
+    start: int          # first sample index
+    count: int          # number of samples
+
+    @property
+    def end(self) -> int:
+        return self.start + self.count
+
+
+@dataclasses.dataclass
+class PartitionAssignment:
+    """What the leader hands a worker on ``next()``: partition metadata plus
+    the offset to resume from (non-zero when re-assigning a partially
+    processed partition returned by a gracefully exiting worker)."""
+    partition: Partition
+    offset: int = 0     # samples already consumed within the partition
+
+    @property
+    def remaining(self) -> int:
+        return self.partition.count - self.offset
+
+
+def make_partitions(n_samples: int, d: int) -> list[Partition]:
+    """Split [0, n_samples) into d nearly-equal logical partitions."""
+    assert 0 < d <= n_samples
+    base, rem = divmod(n_samples, d)
+    parts, start = [], 0
+    for i in range(d):
+        cnt = base + (1 if i < rem else 0)
+        parts.append(Partition(i, start, cnt))
+        start += cnt
+    return parts

@@ -1,0 +1,170 @@
+"""EDL's dynamic data pipeline (§4.3) and the static-allocation baseline.
+
+Leader-side, on-demand partition assignment:
+  * the leader holds a per-epoch random permutation of partition indices;
+  * a worker calling ``next_assignment(worker)`` receives the next unassigned
+    partition's metadata (or a partially-consumed one returned by an exiting
+    worker — those are served first so nothing is lost or repeated);
+  * workers report (partition, offset) progress with each gradient-sync
+    (``report_progress``), so the leader can re-queue the unread remainder if
+    the worker leaves or dies;
+  * when every partition of the epoch is fully consumed the next epoch starts
+    with a fresh permutation.
+
+Guarantee: within an epoch every sample index is served exactly once,
+regardless of the scaling schedule (property-tested in tests/test_pipeline.py).
+Order may differ between runs — the paper's accepted consistency semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Iterator
+
+import numpy as np
+
+from repro.data.partition import Partition, PartitionAssignment, \
+    make_partitions
+
+
+class EpochExhausted(Exception):
+    """No data left in this epoch for now (assignments may still be in
+    flight; the epoch rolls over once they complete)."""
+
+
+@dataclasses.dataclass
+class _InFlight:
+    assignment: PartitionAssignment
+    consumed: int       # samples the worker has reported done (>= offset)
+
+
+class DynamicDataPipeline:
+    def __init__(self, n_samples: int, d_partitions: int, *, seed: int = 0,
+                 max_epochs: int | None = None):
+        self.partitions = make_partitions(n_samples, d_partitions)
+        self.n_samples = n_samples
+        self.seed = seed
+        self.epoch = 0
+        self.max_epochs = max_epochs
+        self._start_epoch()
+
+    # ------------------------------------------------------------ epochs
+    def _start_epoch(self):
+        rng = np.random.default_rng(self.seed + 7919 * self.epoch)
+        self._queue: deque[PartitionAssignment] = deque(
+            PartitionAssignment(self.partitions[i], 0)
+            for i in rng.permutation(len(self.partitions)))
+        self._returned: deque[PartitionAssignment] = deque()
+        self._in_flight: dict[str, _InFlight] = {}
+        self._done_samples = 0
+
+    def _maybe_roll_epoch(self):
+        if (self._done_samples == self.n_samples and not self._queue
+                and not self._returned and not self._in_flight):
+            self.epoch += 1
+            self._start_epoch()
+
+    @property
+    def exhausted(self) -> bool:
+        return self.max_epochs is not None and self.epoch >= self.max_epochs
+
+    # ------------------------------------------------------------ leader API
+    def next_assignment(self, worker: str) -> PartitionAssignment:
+        """Serve the next chunk of data to ``worker`` (partially-consumed
+        returns first). Raises EpochExhausted when nothing is available."""
+        assert worker not in self._in_flight, \
+            f"{worker} must finish/return its partition first"
+        if self._returned:
+            a = self._returned.popleft()
+        elif self._queue:
+            a = self._queue.popleft()
+        else:
+            raise EpochExhausted
+        self._in_flight[worker] = _InFlight(a, a.offset)
+        return a
+
+    def report_progress(self, worker: str, pid: int, offset: int):
+        """Piggybacked on the per-mini-batch gradient-sync request."""
+        inf = self._in_flight.get(worker)
+        assert inf is not None and inf.assignment.partition.pid == pid
+        assert inf.consumed <= offset <= inf.assignment.partition.count
+        inf.consumed = offset
+
+    def release(self, worker: str, *, dead: bool = False):
+        """Graceful exit (or failure): re-queue the unread remainder of the
+        worker's current partition so another worker picks it up."""
+        inf = self._in_flight.pop(worker, None)
+        if inf is None:
+            return
+        consumed = inf.consumed if not dead else inf.assignment.offset
+        # on failure we conservatively replay from the last *reported* offset
+        # (dead=False path) or the original offset under approximate recovery
+        part = inf.assignment.partition
+        done_now = consumed - inf.assignment.offset
+        self._done_samples += done_now
+        if consumed < part.count:
+            self._returned.append(PartitionAssignment(part, consumed))
+        self._maybe_roll_epoch()
+
+    # ---------------------------------------------------------- accounting
+    def note_consumed(self, worker: str, n: int) -> tuple[int, bool]:
+        """Advance the worker's offset by n samples; returns (new_offset,
+        finished). Used by the worker-side iterator."""
+        inf = self._in_flight[worker]
+        new = inf.consumed + n
+        assert new <= inf.assignment.partition.count
+        inf.consumed = new
+        finished = new == inf.assignment.partition.count
+        if finished:
+            self._done_samples += new - inf.assignment.offset
+            del self._in_flight[worker]
+            self._maybe_roll_epoch()
+        return new, finished
+
+    # --------------------------------------------------------- checkpointing
+    def state_dict(self) -> dict:
+        """Serializable state: the permutation queue + in-flight offsets.
+        In-flight work is treated as returned (replayed from last report)."""
+        returned = [(a.partition.pid, a.offset) for a in self._returned]
+        returned += [(i.assignment.partition.pid, i.consumed)
+                     for i in self._in_flight.values()
+                     if i.consumed < i.assignment.partition.count]
+        return {
+            "epoch": self.epoch, "seed": self.seed,
+            "done_samples": self._done_samples + sum(
+                i.consumed - i.assignment.offset
+                for i in self._in_flight.values()),
+            "queue": [a.partition.pid for a in self._queue],
+            "returned": returned,
+        }
+
+    def load_state_dict(self, s: dict):
+        self.epoch = s["epoch"]
+        self.seed = s["seed"]
+        by_pid = {p.pid: p for p in self.partitions}
+        self._queue = deque(PartitionAssignment(by_pid[pid], 0)
+                            for pid in s["queue"])
+        self._returned = deque(PartitionAssignment(by_pid[pid], off)
+                               for pid, off in s["returned"])
+        self._in_flight = {}
+        self._done_samples = s["done_samples"]
+
+
+class StaticAllocationPipeline:
+    """The baseline EDL argues against (§4.3): partitions are split among p
+    workers up-front; re-partitioning is only possible at epoch boundaries."""
+
+    def __init__(self, n_samples: int, d_partitions: int, n_workers: int,
+                 *, seed: int = 0):
+        self.partitions = make_partitions(n_samples, d_partitions)
+        rng = np.random.default_rng(seed)
+        order = rng.permutation(len(self.partitions))
+        self.shards: dict[int, deque[Partition]] = {
+            w: deque() for w in range(n_workers)}
+        for i, pidx in enumerate(order):
+            self.shards[i % n_workers].append(self.partitions[pidx])
+
+    def next_partition(self, worker: int) -> Partition:
+        if not self.shards[worker]:
+            raise EpochExhausted
+        return self.shards[worker].popleft()

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash attention kernel: naive full-matrix masked
+softmax attention (fp32). Small shapes only — the kernel sweep tests compare
+against this exactly."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  scale: float | None = None, kv_len: int | None = None):
+    """q: [B,Hq,Lq,D]; k/v: [B,Hkv,Lk,D]. Returns [B,Hq,Lq,D] in q.dtype."""
+    B, Hq, Lq, D = q.shape
+    _, Hkv, Lk, _ = k.shape
+    G = Hq // Hkv
+    scale = D ** -0.5 if scale is None else scale
+    k = jnp.repeat(k, G, axis=1)
+    v = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(Lq)[:, None]
+    k_pos = jnp.arange(Lk)[None, :]
+    mask = jnp.ones((Lq, Lk), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    if kv_len is not None:
+        mask &= k_pos < kv_len
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

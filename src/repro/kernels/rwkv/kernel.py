@@ -1,0 +1,101 @@
+"""Pallas TPU kernel for the RWKV6 WKV recurrence (data-dependent decay).
+
+TPU adaptation of the CUDA wkv kernel (which runs a serial per-thread scan):
+the sequence is processed in chunks; within a chunk the recurrence is the
+*parallel* form — an intra-chunk lower-triangular matmul plus a cross-chunk
+state term — so the MXU does the work. The [dk, dv] state is carried in VMEM
+scratch across the sequential chunk axis of the grid.
+
+All decay factors are exp() of differences of cumulative log-decays, which
+are <= 0 by construction — numerically safe at any chunk size (same scheme
+as models/ssm.wkv6_chunked, the jnp fallback this kernel is tested against).
+
+Grid = (batch, heads, n_chunks); chunks is the sequential axis.
+BlockSpecs (per step, VMEM): r/k/v/logw [1,1,C,hd]; u [1,hd];
+state scratch [hd, hd] fp32; outputs y [1,1,C,hd] and final state [1,1,hd,hd].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref, y_ref, sT_ref,
+                 s_scr, *, chunk: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, 0].astype(jnp.float32)                  # [C, hd]
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    lw = lw_ref[0, 0].astype(jnp.float32)                # log decay, <= 0
+    u = u_ref[0].astype(jnp.float32)                     # [hd]
+    S = s_scr[...]                                       # [dk, dv]
+
+    cum = jnp.cumsum(lw, axis=0)                         # logP_t
+    cum_shift = cum - lw                                 # logP_{t-1}
+    # intra-chunk: A[t,s] = sum_d r[t,d] k[s,d] exp(cum_shift[t,d]-cum[s,d])
+    # (t > s; decay diff <= 0). Diagonal gets the u bonus.
+    diff = cum_shift[:, None, :] - cum[None, :, :]       # [t, s, hd]
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    strict = t_idx > s_idx
+    factor = jnp.exp(jnp.where(strict[..., None], diff, 0.0)) \
+        * strict[..., None]
+    A = jnp.einsum("td,sd,tsd->ts", r, k, factor)
+    diag = jnp.sum(r * k * u[None, :], axis=1)           # [t]
+    A = A + jnp.where(t_idx == s_idx, diag[:, None], 0.0)
+    y = jax.lax.dot_general(A, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y = y + jax.lax.dot_general(r * jnp.exp(cum_shift), S,
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    last = cum[-1]                                       # [hd]
+    k_dec = k * jnp.exp(last[None, :] - cum)
+    s_scr[...] = jnp.exp(last)[:, None] * S + jax.lax.dot_general(
+        k_dec, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ci == n_chunks - 1)
+    def _finish():
+        sT_ref[0, 0] = s_scr[...].astype(sT_ref.dtype)
+
+
+def wkv6_bhld(r, k, v, logw, u, s0, *, chunk: int = 32,
+              interpret: bool = True):
+    """r/k/v/logw: [B, H, L, hd]; u: [H, hd]; s0: [B, H, hd, hd].
+    Returns (y [B,H,L,hd], sT [B,H,hd,hd])."""
+    B, H, L, hd = r.shape
+    assert L % chunk == 0
+    n_chunks = L // chunk
+    kernel = functools.partial(_wkv6_kernel, chunk=chunk, n_chunks=n_chunks)
+    seq_spec = pl.BlockSpec((1, 1, chunk, hd), lambda b, h, ci: (b, h, ci, 0))
+    y, sT = pl.pallas_call(
+        kernel,
+        grid=(B, H, n_chunks),
+        in_specs=[
+            seq_spec, seq_spec, seq_spec, seq_spec,
+            pl.BlockSpec((1, hd), lambda b, h, ci: (h, 0)),
+            pl.BlockSpec((1, 1, hd, hd), lambda b, h, ci: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            seq_spec,
+            pl.BlockSpec((1, 1, hd, hd), lambda b, h, ci: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, L, hd), r.dtype),
+            jax.ShapeDtypeStruct((B, H, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u, s0)
+    return y, sT

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle: the serial WKV6 recurrence (identical to
+models/ssm.wkv6_scan, re-exported here so kernel tests depend only on the
+kernels package contract)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.ssm import wkv6_scan
+
+
+def wkv6_ref(r, k, v, logw, u, s0):
+    """Layout [B, H, L, hd] (kernel layout). Serial scan in fp32."""
+    tr = lambda a: jnp.swapaxes(a, 1, 2)      # -> [B, L, H, hd]
+    w = jnp.exp(logw)
+    y, sT = wkv6_scan(tr(r), tr(k), tr(v), tr(w), u, s0)
+    return tr(y), sT

@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+Functions, not module-level constants: importing this module never touches
+jax device state (the dry-run needs to set XLA_FLAGS before the first jax
+device query; see launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+# TPU v5e hardware constants used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(data: int, model: int = 1, pod: int = 1, devices=None):
+    """A (pod?, data, model) mesh over an explicit device list — the elastic
+    runtime builds these as the ``data`` axis grows/shrinks."""
+    devices = np.asarray(devices if devices is not None else jax.devices())
+    n = pod * data * model
+    assert devices.size >= n, f"need {n} devices, have {devices.size}"
+    devs = devices.reshape(-1)[:n]
+    if pod > 1:
+        return jax.sharding.Mesh(devs.reshape(pod, data, model),
+                                 ("pod", "data", "model"))
+    return jax.sharding.Mesh(devs.reshape(data, model), ("data", "model"))

@@ -1,0 +1,159 @@
+import argparse
+import os
+import sys
+
+
+def _preparse_devices() -> int:
+    ap = argparse.ArgumentParser(add_help=False)
+    ap.add_argument("--devices", type=int,
+                    default=int(os.environ.get("EDL_DEVICES", "8")))
+    ns, _ = ap.parse_known_args()
+    return ns.devices
+
+
+_N_DEV = _preparse_devices()
+if "--xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               f" --xla_force_host_platform_device_count="
+                               f"{_N_DEV}")
+
+"""Elastic training driver (end-to-end example + integration-test target).
+
+Trains an elastic job under a scaling schedule and reports metrics + scaling
+records + exactly-once data accounting as JSON.
+
+  PYTHONPATH=src python -m repro.launch.train --arch edl-paper --steps 200 \
+      --batch 8 --seq 128 --init-p 2 --devices 8 \
+      --schedule out:2@30,in:2@120
+
+Schedule grammar: ``<op>:<n>@<step>`` with op in {out, in, migrate,
+stop_resume_out, stop_resume_in, straggler, fail}.
+"""
+import json
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="edl-paper")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--init-p", type=int, default=2)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--devices", type=int, default=_N_DEV)
+    ap.add_argument("--schedule", default="")
+    ap.add_argument("--n-samples", type=int, default=1 << 14)
+    ap.add_argument("--d-partitions", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--json", action="store_true", help="machine output")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    import jax  # noqa: E402  (after XLA_FLAGS)
+    from repro.configs import get_config
+    from repro.core import ElasticTrainer, stop_resume_rescale
+    from repro.core.failure import fail_worker, recover
+    from repro.optim import adamw
+
+    def _apply_op(trainer, opn, n):
+        if opn == "out":
+            trainer.scale_out(n)
+        elif opn == "in":
+            trainer.scale_in(n)
+        elif opn == "migrate":
+            trainer.migrate(n)
+        elif opn == "stop_resume_out":
+            stop_resume_rescale(trainer, trainer.p + n)
+        elif opn == "stop_resume_in":
+            stop_resume_rescale(trainer, trainer.p - n)
+        elif opn == "straggler":
+            trainer.injected_delay[trainer.worker_ids[-1]] = 0.05
+        elif opn == "fail":
+            fail_worker(trainer, trainer.worker_ids[-1])
+            recover(trainer)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    trainer = ElasticTrainer(
+        cfg, global_batch=args.batch, seq_len=args.seq,
+        init_parallelism=args.init_p, model_parallel=args.model_parallel,
+        optimizer=adamw(args.lr), n_samples=args.n_samples,
+        d_partitions=args.d_partitions, seed=args.seed)
+
+    schedule: dict[int, list[tuple[str, int]]] = {}
+    if args.schedule:
+        for item in args.schedule.split(","):
+            opn, rest = item.split(":")
+            n, at = rest.split("@")
+            schedule.setdefault(int(at), []).append((opn, int(n)))
+
+    consumed_ids: list = []
+    log = print if not args.json else (lambda *a, **k: None)
+    t0 = time.monotonic()
+    from repro.core.scaling import Busy, Phase
+    deadline = t0 + float(os.environ.get("EDL_WALL_LIMIT_S", "600"))
+
+    def pending_ops():
+        return any(k >= trainer.step_idx and v for k, v in schedule.items())
+
+    # main loop runs to --steps, then drains: pending (retried) schedule
+    # entries and any in-flight background scaling commit before exit
+    while (trainer.step_idx < args.steps or pending_ops()
+           or trainer.controller.phase is not Phase.IDLE):
+        if time.monotonic() > deadline:
+            break
+        for opn, n in schedule.pop(trainer.step_idx, []):
+            try:
+                _apply_op(trainer, opn, n)
+            except Busy:    # paper: scheduler retries after a delay
+                schedule.setdefault(trainer.step_idx + 5, []).append(
+                    (opn, n))
+        m = trainer.step()
+        if m is None:
+            if trainer.controller.phase is Phase.SCHEDULED:
+                trainer._commit_switch()
+            continue
+        consumed_ids.append(trainer._last_sample_ids)
+        # straggler mitigation: leader removes flagged workers (§5.2)
+        for wid in getattr(trainer, "_flagged_stragglers", []):
+            trainer.injected_delay.pop(wid, None)
+            try:
+                trainer.scale_in(1, victims=[wid])
+            except Exception:
+                pass
+        if m["step"] % 20 == 0:
+            log(f"step {m['step']:5d} p={m['p']} loss={m['loss']:.4f} "
+                f"thr={trainer.throughput():.1f} samp/s")
+    wall = time.monotonic() - t0
+
+    import numpy as np
+    ids = np.concatenate(consumed_ids) if consumed_ids else np.array([])
+    epochs_done = trainer.pipeline.epoch
+    summary = {
+        "arch": cfg.name, "steps": trainer.step_idx, "final_p": trainer.p,
+        "wall_s": round(wall, 2),
+        "final_loss": trainer.metrics_log[-1]["loss"],
+        "first_loss": trainer.metrics_log[0]["loss"],
+        "throughput": trainer.throughput(),
+        "scaling_events": [r.summary() for r in trainer.controller.history],
+        "samples_seen": int(trainer.samples_seen),
+        "unique_sample_frac": (float(len(set(ids.tolist())) / len(ids))
+                               if len(ids) else 0.0),
+        "epochs_done": epochs_done,
+        "leader": trainer.leader_id,
+    }
+    # exactly-once check over any FULL epochs completed
+    if epochs_done >= 1 and len(ids) >= trainer.dataset.n_samples:
+        first_epoch = ids[:trainer.dataset.n_samples]
+        summary["epoch0_exactly_once"] = bool(
+            sorted(first_epoch.tolist()) ==
+            list(range(trainer.dataset.n_samples)))
+    print(json.dumps(summary) if args.json else
+          json.dumps(summary, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,343 @@
+"""Attention: GQA / MLA / sliding-window, in chunked (flash-style) pure-jnp
+form for train/prefill and single-shot masked form for decode.
+
+The chunked form scans over KV chunks with running (m, l, acc) — bounded
+activation memory at 32k+ sequence lengths. ``swa_pruned=True`` additionally
+*skips* KV chunks outside the window via q-blocking + dynamic_slice (a real
+FLOP reduction visible in the roofline, not just masking) — this is one of the
+beyond-paper optimizations recorded in EXPERIMENTS.md §Perf.
+
+The Pallas kernel (kernels/attention) implements the same math with explicit
+VMEM BlockSpecs for TPU; models call it through kernels.attention.ops when
+``use_pallas`` is set, with this module as the fallback/oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_linear, apply_rmsnorm, apply_rope, dt, \
+    linear_specs, rmsnorm_specs
+from repro.sharding import ShardedInit, constrain
+
+NEG_INF = -1e30
+
+
+# =============================================================== chunked core
+def _online_update(carry, s, v_chunk):
+    """Online softmax update. s: [B,H,G,Lq,C] fp32; v_chunk: [B,H,C,Dv]."""
+    m_prev, l_prev, acc_prev = carry
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1)
+    acc_new = acc_prev * corr[..., None] + jnp.einsum(
+        "bhgqc,bhcd->bhgqd", p, v_chunk.astype(jnp.float32))
+    return m_new, l_new, acc_new
+
+
+def chunked_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                      chunk: int = 1024, scale: float | None = None,
+                      kv_valid=None, unroll: bool = False):
+    """q: [B,Hkv,G,Lq,Dk]; k: [B,Hkv,Lk,Dk]; v: [B,Hkv,Lk,Dv]. fp32 softmax.
+
+    kv_valid: optional scalar count of valid kv positions (<= Lk).
+    Returns [B,Hkv,G,Lq,Dv].
+    """
+    B, Hkv, G, Lq, Dk = q.shape
+    Lk, Dv = k.shape[2], v.shape[3]
+    scale = scale if scale is not None else Dk ** -0.5
+    from repro.sharding import fit_chunk
+    chunk = fit_chunk(Lk, chunk)
+    n_chunks = Lk // chunk
+    q_pos = jnp.arange(Lq)
+
+    def body(carry, ci):
+        # NB: q/k stay in model dtype so any model-axis gather of them moves
+        # bf16, not fp32 (halves those collective bytes); the score dot
+        # accumulates in fp32 (MXU-native bf16xbf16->f32).
+        k_c = jax.lax.dynamic_slice_in_dim(k, ci * chunk, chunk, axis=2)
+        v_c = jax.lax.dynamic_slice_in_dim(v, ci * chunk, chunk, axis=2)
+        s = jnp.einsum("bhgqd,bhcd->bhgqc", q, k_c,
+                       preferred_element_type=jnp.float32) * scale
+        k_pos = ci * chunk + jnp.arange(chunk)
+        mask = jnp.ones((Lq, chunk), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window > 0:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        if kv_valid is not None:
+            mask &= (k_pos < kv_valid)[None, :]
+        s = jnp.where(mask, s, NEG_INF)
+        return _online_update(carry, s, v_c), None
+
+    # remat: do NOT save per-chunk scores/probs for backward (recompute them);
+    # without this the inner scan saves O(n_chunks * B*H*Lq*chunk) fp32.
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    init = (jnp.full((B, Hkv, G, Lq), NEG_INF, jnp.float32),
+            jnp.zeros((B, Hkv, G, Lq), jnp.float32),
+            jnp.zeros((B, Hkv, G, Lq, Dv), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(body, init, jnp.arange(n_chunks),
+                                  unroll=n_chunks if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def swa_pruned_attention(q, k, v, *, window: int, q_block: int = 1024,
+                         chunk: int = 1024, scale: float | None = None,
+                         unroll: bool = False):
+    """Sliding-window attention that SKIPS out-of-window KV chunks.
+
+    For q block i (rows [i*qb, (i+1)*qb)), only kv positions in
+    [i*qb + qb - 1 - window + 1, (i+1)*qb) can be attended; we slice a static
+    window of ceil((window+qb)/chunk)*chunk kv columns per q block.
+    """
+    B, Hkv, G, Lq, Dk = q.shape
+    Lk = k.shape[2]
+    scale = scale if scale is not None else Dk ** -0.5
+    from repro.sharding import fit_chunk
+    q_block = fit_chunk(Lq, q_block)
+    span = ((window + q_block + chunk - 1) // chunk) * chunk
+    span = min(span, Lk)
+
+    def q_body(_, qi):
+        q_c = jax.lax.dynamic_slice_in_dim(q, qi * q_block, q_block, axis=3)
+        hi = (qi + 1) * q_block              # kv upper bound (exclusive)
+        lo = jnp.maximum(hi - span, 0)
+        k_c = jax.lax.dynamic_slice_in_dim(k, lo, span, axis=2)
+        v_c = jax.lax.dynamic_slice_in_dim(v, lo, span, axis=2)
+        s = jnp.einsum("bhgqd,bhcd->bhgqc", q_c, k_c,
+                       preferred_element_type=jnp.float32) * scale
+        q_pos = qi * q_block + jnp.arange(q_block)
+        k_pos = lo + jnp.arange(span)
+        mask = (q_pos[:, None] >= k_pos[None, :]) & \
+               ((q_pos[:, None] - k_pos[None, :]) < window)
+        s = jnp.where(mask, s, NEG_INF)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        out = jnp.einsum("bhgqc,bhcd->bhgqd", p,
+                         v_c.astype(jnp.float32))
+        out = out / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+        return None, out.astype(q.dtype)
+
+    q_body = jax.checkpoint(q_body,
+                            policy=jax.checkpoint_policies.nothing_saveable)
+    nq = Lq // q_block
+    _, blocks = jax.lax.scan(q_body, None, jnp.arange(nq),
+                             unroll=nq if unroll else 1)
+    # blocks: [nq, B, Hkv, G, qb, Dv] -> [B, Hkv, G, Lq, Dv]
+    out = jnp.moveaxis(blocks, 0, 3)
+    return out.reshape(B, Hkv, G, Lq, out.shape[-1])
+
+
+def decode_attention(q, k, v, kv_valid, *, window: int = 0,
+                     scale: float | None = None):
+    """Single-token decode. q: [B,Hkv,G,1,Dk]; k/v: [B,Hkv,S,D*].
+
+    kv_valid = number of tokens written (current position + 1). For a ring
+    buffer (window > 0) every slot is valid once kv_valid >= S.
+    """
+    Dk = q.shape[-1]
+    S = k.shape[2]
+    scale = scale if scale is not None else Dk ** -0.5
+    s = jnp.einsum("bhgqd,bhcd->bhgqc", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = constrain(s, (None, "kv_heads", None, None, "seq_shard"))
+    idx = jnp.arange(S)
+    valid = idx < jnp.minimum(kv_valid, S)
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqc,bhcd->bhgqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ==================================================================== GQA
+def gqa_specs(cfg) -> dict:
+    D, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "wq": linear_specs(D, H * Dh, "embed", "heads", bias=cfg.qkv_bias),
+        "wk": linear_specs(D, Hkv * Dh, "embed", "kv_heads", bias=cfg.qkv_bias),
+        "wv": linear_specs(D, Hkv * Dh, "embed", "kv_heads", bias=cfg.qkv_bias),
+        "wo": linear_specs(H * Dh, D, "heads", "embed"),
+    }
+
+
+def gqa_cache_spec(cfg, batch: int, max_seq: int) -> dict:
+    Hkv, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    S = min(max_seq, cfg.window) if cfg.window > 0 else max_seq
+    ax = ("batch", "kv_heads", "seq_shard", None)
+    return {"k": ShardedInit((batch, Hkv, S, Dh), ax, "zeros"),
+            "v": ShardedInit((batch, Hkv, S, Dh), ax, "zeros")}
+
+
+def _tp_size() -> int:
+    from repro.sharding import get_abstract_mesh_or_none
+    mesh = get_abstract_mesh_or_none()
+    return mesh.shape.get("model", 1) if mesh is not None else 1
+
+
+def gqa_forward(cfg, p, x, *, positions, cache=None, use_pallas=False):
+    swa_pruned = cfg.swa_pruned
+    """x: [B,L,D]. cache: dict(k,v) + kv_valid positions handled by caller via
+    ``positions`` (decode: positions[:, 0] == current index).
+
+    Head layout is sharding-aware: when the total q-head count divides the
+    tensor-parallel axis, heads are kept FLAT and kv heads are repeated so
+    every score/probability tensor is rank-local (each rank holds H/tp whole
+    q heads and the kv heads they read). With the grouped [B,Hkv,G,L,D]
+    layout and Hkv < tp, GSPMD auto-shards k/v hierarchically against a
+    replicated q and all-gathers fp32 score tensors — observed +12 GiB/layer
+    on starcoder2 train_4k (EXPERIMENTS.md §Perf H2)."""
+    B, L, D = x.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    tp = _tp_size()
+    # train/prefill only: decode scores are tiny and the compact Hkv cache
+    # layout matters more there
+    flat = (H % tp == 0) and (Hkv % tp != 0) and Hkv < tp and cache is None
+    G = H // Hkv
+    cd = dt(cfg, "compute")
+    q = apply_linear(p["wq"], x, cd).reshape(B, L, Hkv, G, Dh)
+    k = apply_linear(p["wk"], x, cd).reshape(B, L, Hkv, Dh)
+    v = apply_linear(p["wv"], x, cd).reshape(B, L, Hkv, Dh)
+    q = apply_rope(q, positions[:, :, None, None], cfg.rope_theta)
+    k = apply_rope(k, positions[:, :, None], cfg.rope_theta)
+    q = jnp.transpose(q, (0, 2, 3, 1, 4))            # [B,Hkv,G,L,Dh]
+    k = jnp.transpose(k, (0, 2, 1, 3))               # [B,Hkv,L,Dh]
+    v = jnp.transpose(v, (0, 2, 1, 3))
+    if flat:
+        # flat-head layout: [B, H(=Hkv*G), 1, L, Dh] q, kv repeated to H.
+        # The repeat of a (replicated) kv materializes only the local
+        # H/tp heads per rank under the 'heads' constraint.
+        q = q.reshape(B, H, 1, L, Dh)
+        k = jnp.repeat(k, G, axis=1)
+        v = jnp.repeat(v, G, axis=1)
+        head_ax = "heads"
+    else:
+        head_ax = "kv_heads"
+    q = constrain(q, ("batch", head_ax, None, None, None))
+    k = constrain(k, ("batch", head_ax, None, None))
+    v = constrain(v, ("batch", head_ax, None, None))
+
+    if cache is not None:                            # decode (L == 1)
+        S = cache["k"].shape[2]
+        pos = positions[0, 0]
+        slot = pos % S if cfg.window > 0 else pos
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, slot, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, slot, 0))
+        ck = constrain(ck, ("batch", "kv_heads", "seq_shard", None))
+        cv = constrain(cv, ("batch", "kv_heads", "seq_shard", None))
+        out = decode_attention(q, ck, cv, pos + 1, window=cfg.window)
+        new_cache = {"k": ck, "v": cv}
+    else:
+        if use_pallas:
+            from repro.kernels.attention import ops as attn_ops
+            out = attn_ops.flash_attention(q, k, v, causal=True,
+                                           window=cfg.window)
+        elif cfg.window > 0 and swa_pruned and L > cfg.window:
+            out = swa_pruned_attention(q, k, v, window=cfg.window,
+                                       chunk=cfg.attn_chunk,
+                                       unroll=cfg.full_unroll)
+        else:
+            out = chunked_attention(q, k, v, causal=True, window=cfg.window,
+                                    chunk=cfg.attn_chunk,
+                                    unroll=cfg.full_unroll)
+        new_cache = None
+    out = jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(B, L, H * Dh)
+    return apply_linear(p["wo"], out, cd), new_cache
+
+
+# ==================================================================== MLA
+def mla_specs(cfg) -> dict:
+    D, H = cfg.d_model, cfg.n_heads
+    m = cfg.mla
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        "wq_a": linear_specs(D, m.q_lora, "embed", "lora"),
+        "q_norm": rmsnorm_specs(m.q_lora),
+        "wq_b": linear_specs(m.q_lora, H * qk, "lora", "heads"),
+        "wkv_a": linear_specs(D, m.kv_lora + m.qk_rope_dim, "embed", "lora"),
+        "kv_norm": rmsnorm_specs(m.kv_lora),
+        "w_uk": {"w": ShardedInit((H, m.kv_lora, m.qk_nope_dim),
+                                  ("heads", "lora", None))},
+        "w_uv": {"w": ShardedInit((H, m.kv_lora, m.v_head_dim),
+                                  ("heads", "lora", None))},
+        "wo": linear_specs(H * m.v_head_dim, D, "heads", "embed"),
+    }
+
+
+def mla_cache_spec(cfg, batch: int, max_seq: int) -> dict:
+    m = cfg.mla
+    return {"ckv": ShardedInit((batch, 1, max_seq, m.kv_lora),
+                               ("batch", None, "seq_shard", None), "zeros"),
+            "krope": ShardedInit((batch, 1, max_seq, m.qk_rope_dim),
+                                 ("batch", None, "seq_shard", None), "zeros")}
+
+
+def mla_forward(cfg, p, x, *, positions, cache=None, **_):
+    """MLA as MQA over the compressed KV: k = v = [c_kv ; k_rope], with per-head
+    W_uk absorbed into q and W_uv applied to the attention output. The cache
+    stores only (c_kv, k_rope) — the paper-exact compressed layout."""
+    B, L, D = x.shape
+    m = cfg.mla
+    H = cfg.n_heads
+    cd = dt(cfg, "compute")
+    q_lat = apply_rmsnorm(p["q_norm"], apply_linear(p["wq_a"], x, cd),
+                          cfg.norm_eps)
+    q = apply_linear(p["wq_b"], q_lat, cd).reshape(
+        B, L, H, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions[:, :, None], cfg.rope_theta)
+    # absorb W_uk: [B,L,H,nope] x [H, lora, nope] -> [B,L,H,lora]
+    q_abs = jnp.einsum("blhn,hkn->blhk", q_nope.astype(cd),
+                       p["w_uk"]["w"].astype(cd))
+    q_full = jnp.concatenate([q_abs, q_rope.astype(cd)], axis=-1)
+    q_full = jnp.transpose(q_full, (0, 2, 1, 3))[:, None]   # [B,1,H,L,qk']
+
+    kv_a = apply_linear(p["wkv_a"], x, cd)
+    ckv, k_rope = jnp.split(kv_a, [m.kv_lora], axis=-1)
+    ckv = apply_rmsnorm(p["kv_norm"], ckv, cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions[:, :, None],
+                        cfg.rope_theta)[:, :, 0]
+    ckv_n = ckv[:, None]                                    # [B,1,L,lora]
+    krope_n = k_rope[:, None].astype(cd)
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+
+    if cache is not None:
+        pos = positions[0, 0]
+        c = jax.lax.dynamic_update_slice(cache["ckv"], ckv_n, (0, 0, pos, 0))
+        r = jax.lax.dynamic_update_slice(cache["krope"], krope_n, (0, 0, pos, 0))
+        c = constrain(c, ("batch", None, "seq_shard", None))
+        r = constrain(r, ("batch", None, "seq_shard", None))
+        k_full = jnp.concatenate([c.astype(cd), r.astype(cd)], axis=-1)
+        out = decode_attention(q_full, k_full, c.astype(cd), pos + 1,
+                               scale=scale)
+        new_cache = {"ckv": c, "krope": r}
+    else:
+        k_full = jnp.concatenate([ckv_n.astype(cd), krope_n], axis=-1)
+        out = chunked_attention(q_full, k_full, ckv_n.astype(cd), causal=True,
+                                chunk=cfg.attn_chunk, scale=scale,
+                                unroll=cfg.full_unroll)
+        new_cache = None
+    # out: [B,1,H,L,lora] -> W_uv -> [B,L,H,v_dim]
+    out = jnp.einsum("bhlk,hkv->blhv", out[:, 0].astype(cd),
+                     p["w_uv"]["w"].astype(cd))
+    out = out.reshape(B, L, H * m.v_head_dim)
+    return apply_linear(p["wo"], out, cd), new_cache
+
+
+def attention_specs(cfg) -> dict:
+    return mla_specs(cfg) if cfg.attn_kind == "mla" else gqa_specs(cfg)
+
+
+def attention_forward(cfg, p, x, **kw):
+    fn = mla_forward if cfg.attn_kind == "mla" else gqa_forward
+    return fn(cfg, p, x, **kw)
+
+
+def attention_cache_spec(cfg, batch: int, max_seq: int) -> dict:
+    if cfg.attn_kind == "mla":
+        return mla_cache_spec(cfg, batch, max_seq)
+    return gqa_cache_spec(cfg, batch, max_seq)

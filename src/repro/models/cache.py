@@ -1,0 +1,68 @@
+"""Decode-state (KV / SSM) cache: spec construction, init, and the stacked
+layout that matches the scanned layer stack.
+
+Cache pytree layout:
+  {"layers": {"slot<j>": {<stacked over periods>: [n_periods, ...]}},
+   "pos": int32 scalar}   # next write position (== tokens seen so far)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.blocks import block_cache_spec, scan_plan
+from repro.sharding import ShardedInit
+
+CACHE_DTYPES = {"k": None, "v": None}     # default: cfg param dtype
+
+
+def _stack(spec: ShardedInit, n: int) -> ShardedInit:
+    return ShardedInit((n,) + spec.shape, ("layers",) + spec.axes, spec.init)
+
+
+def cache_spec_tree(cfg, batch: int, max_seq: int) -> dict:
+    slots, n_periods = scan_plan(cfg)
+    layers = {}
+    for j, (mixer, _) in enumerate(slots):
+        spec = block_cache_spec(cfg, mixer, batch, max_seq)
+        layers[f"slot{j}"] = jax.tree.map(
+            lambda s: _stack(s, n_periods), spec,
+            is_leaf=lambda x: isinstance(x, ShardedInit))
+    return {"layers": layers}
+
+
+def cache_specs(cfg, batch: int, max_seq: int) -> dict:
+    """ShapeDtypeStructs for the dry-run (no allocation)."""
+    dtype = jnp.dtype(cfg.param_dtype)
+    tree = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+        cache_spec_tree(cfg, batch, max_seq),
+        is_leaf=lambda x: isinstance(x, ShardedInit))
+    tree["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+    return tree
+
+
+def cache_logical_axes(cfg, batch: int, max_seq: int) -> dict:
+    tree = jax.tree.map(
+        lambda s: s.axes, cache_spec_tree(cfg, batch, max_seq),
+        is_leaf=lambda x: isinstance(x, ShardedInit))
+    tree["pos"] = ()
+    return tree
+
+
+def init_cache(cfg, batch: int, max_seq: int, pos: int = 0) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    tree = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, dtype),
+        cache_spec_tree(cfg, batch, max_seq),
+        is_leaf=lambda x: isinstance(x, ShardedInit))
+    tree["pos"] = jnp.asarray(pos, jnp.int32)
+    return tree
+
+
+def cache_bytes(cfg, batch: int, max_seq: int) -> int:
+    specs = cache_spec_tree(cfg, batch, max_seq)
+    itemsize = jnp.dtype(cfg.param_dtype).itemsize
+    return int(sum(np.prod(s.shape) * itemsize for s in jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, ShardedInit))))

@@ -1,0 +1,95 @@
+"""Shared layers: RMSNorm, RoPE, SwiGLU MLP, embeddings, linear helpers.
+
+Parameters are plain nested dicts of jnp arrays; each module also exposes a
+``*_specs`` function returning the same tree of :class:`ShardedInit` so that
+init, sharding, and the dry-run ShapeDtypeStructs all derive from one source.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import ShardedInit, constrain
+
+
+def dt(cfg, kind: str):
+    return jnp.dtype(cfg.param_dtype if kind == "param" else cfg.compute_dtype)
+
+
+# ---------------------------------------------------------------- linear
+def linear_specs(d_in: int, d_out: int, in_axis: str | None, out_axis: str | None,
+                 bias: bool = False, scale: float = 1.0) -> dict:
+    s = {"w": ShardedInit((d_in, d_out), (in_axis, out_axis), "normal", scale)}
+    if bias:
+        s["b"] = ShardedInit((d_out,), (out_axis,), "zeros")
+    return s
+
+
+def apply_linear(p: dict, x: jax.Array, compute_dtype) -> jax.Array:
+    y = jnp.einsum("...d,df->...f", x.astype(compute_dtype),
+                   p["w"].astype(compute_dtype))
+    if "b" in p:
+        y = y + p["b"].astype(compute_dtype)
+    return y
+
+
+# ---------------------------------------------------------------- rmsnorm
+def rmsnorm_specs(d: int) -> dict:
+    return {"scale": ShardedInit((d,), (None,), "ones")}
+
+
+def apply_rmsnorm(p: dict, x: jax.Array, eps: float) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., L, D]; positions: broadcastable to [..., L]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., L, D/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- swiglu mlp
+def mlp_specs(d_model: int, d_ff: int) -> dict:
+    return {
+        "wi_gate": ShardedInit((d_model, d_ff), ("embed", "mlp")),
+        "wi_up": ShardedInit((d_model, d_ff), ("embed", "mlp")),
+        "wo": ShardedInit((d_ff, d_model), ("mlp", "embed")),
+    }
+
+
+def apply_mlp(p: dict, x: jax.Array, compute_dtype) -> jax.Array:
+    cd = compute_dtype
+    g = jnp.einsum("...d,df->...f", x.astype(cd), p["wi_gate"].astype(cd))
+    u = jnp.einsum("...d,df->...f", x.astype(cd), p["wi_up"].astype(cd))
+    h = jax.nn.silu(g) * u
+    h = constrain(h, ("batch",) + (None,) * (h.ndim - 2) + ("mlp",))
+    return jnp.einsum("...f,fd->...d", h, p["wo"].astype(cd))
+
+
+# ---------------------------------------------------------------- embedding
+def embed_specs(vocab: int, d_model: int) -> dict:
+    return {"table": ShardedInit((vocab, d_model), ("vocab", "embed"),
+                                 "normal", 1.0)}
+
+
+def apply_embed(p: dict, tokens: jax.Array, compute_dtype) -> jax.Array:
+    out = jnp.take(p["table"].astype(compute_dtype), tokens, axis=0)
+    return constrain(out, ("batch", None, None))
+
+
+def unembed_specs(d_model: int, vocab: int) -> dict:
+    return {"w": ShardedInit((d_model, vocab), ("embed", "vocab"))}

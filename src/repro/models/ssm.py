@@ -1,0 +1,297 @@
+"""State-space mixers: Mamba (S6, for Jamba) and RWKV6 (data-dependent decay).
+
+TPU adaptation (see DESIGN.md §7): the CUDA selective-scan keeps the [D, N]
+state in registers and scans serially per thread; we instead scan over *time
+chunks*, materializing [B, chunk, D, N] only (D sharded over the ``model``
+axis), with an associative scan inside each chunk — chunk-local matmuls feed
+the MXU instead of a serial per-element loop.
+
+RWKV6 uses a serial lax.scan here (the semantic oracle); the Pallas kernel in
+kernels/rwkv implements the chunked parallel form for TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_linear, dt, linear_specs, rmsnorm_specs
+from repro.sharding import ShardedInit, constrain
+
+# ===================================================================== Mamba
+def mamba_specs(cfg) -> dict:
+    s = cfg.ssm
+    D = cfg.d_model
+    di = s.expand * D
+    dtr = s.dt_rank or -(-D // 16)
+    return {
+        "in_proj": linear_specs(D, 2 * di, "embed", "ssm_inner"),
+        "conv_w": {"w": ShardedInit((s.d_conv, di), ("conv", "ssm_inner"),
+                                    "normal", 0.5)},
+        "conv_b": {"b": ShardedInit((di,), ("ssm_inner",), "zeros")},
+        "x_proj": linear_specs(di, dtr + 2 * s.d_state, "ssm_inner", None),
+        "dt_proj": linear_specs(dtr, di, None, "ssm_inner", bias=True),
+        "A_log": {"w": ShardedInit((di, s.d_state), ("ssm_inner", "ssm_state"),
+                                   "alog")},
+        "D_skip": {"w": ShardedInit((di,), ("ssm_inner",), "ones")},
+        "out_proj": linear_specs(di, D, "ssm_inner", "embed"),
+    }
+
+
+def mamba_cache_spec(cfg, batch: int, max_seq: int) -> dict:
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    return {"conv": ShardedInit((batch, s.d_conv - 1, di),
+                                ("batch", "conv", "ssm_inner"), "zeros"),
+            "ssm": ShardedInit((batch, di, s.d_state),
+                               ("batch", "ssm_inner", "ssm_state"), "zeros")}
+
+
+def _assoc_scan(deltaA, deltaBx):
+    """Within-chunk linear recurrence h_t = a_t h_{t-1} + b_t via associative
+    scan over axis=1 (time). Returns (P_t, Q_t) with h_t = P_t h_0 + Q_t."""
+    def combine(l, r):
+        a1, b1 = l
+        a2, b2 = r
+        return a1 * a2, a2 * b1 + b2
+    return jax.lax.associative_scan(combine, (deltaA, deltaBx), axis=1)
+
+
+def mamba_forward(cfg, p, x, *, cache=None, **_):
+    s = cfg.ssm
+    B, L, D = x.shape
+    di = s.expand * D
+    dtr = s.dt_rank or -(-D // 16)
+    cd = dt(cfg, "compute")
+    xz = apply_linear(p["in_proj"], x, cd)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_in = constrain(x_in, ("batch", None, "ssm_inner"))
+
+    conv_w = p["conv_w"]["w"].astype(jnp.float32)           # [K, di]
+    K = conv_w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((B, K - 1, di), x_in.dtype)
+        new_conv_state = jnp.concatenate([pad, x_in], axis=1)[:, -(K - 1):]
+    else:
+        pad = cache["conv"].astype(x_in.dtype)
+        new_conv_state = jnp.concatenate([pad, x_in], axis=1)[:, -(K - 1):]
+    x_pad = jnp.concatenate([pad, x_in], axis=1).astype(jnp.float32)
+    # causal depthwise conv: sum_k w[k] * x[t - (K-1) + k]
+    conv = sum(conv_w[k] * jax.lax.dynamic_slice_in_dim(x_pad, k, L, axis=1)
+               for k in range(K))
+    x_c = jax.nn.silu(conv + p["conv_b"]["b"].astype(jnp.float32)).astype(cd)
+
+    x_db = apply_linear(p["x_proj"], x_c, cd)
+    dt_r, B_, C_ = jnp.split(x_db, [dtr, dtr + s.d_state], axis=-1)
+    delta = jax.nn.softplus(
+        apply_linear(p["dt_proj"], dt_r, jnp.float32))       # [B,L,di] fp32
+    A = -jnp.exp(p["A_log"]["w"].astype(jnp.float32))        # [di, N]
+    B32, C32 = B_.astype(jnp.float32), C_.astype(jnp.float32)
+    x32 = x_c.astype(jnp.float32)
+
+    h0 = (jnp.zeros((B, di, s.d_state), jnp.float32) if cache is None
+          else cache["ssm"].astype(jnp.float32))
+    from repro.sharding import fit_chunk
+    chunk = fit_chunk(L, cfg.mamba_chunk)
+    n_chunks = L // chunk
+
+    def body(h, ci):
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, ci * chunk, chunk, 1)
+        d_c, b_c, c_c, x_cc = sl(delta), sl(B32), sl(C32), sl(x32)
+        dA = jnp.exp(d_c[..., None] * A)                    # [B,c,di,N]
+        dBx = d_c[..., None] * b_c[:, :, None, :] * x_cc[..., None]
+        P, Q = _assoc_scan(dA, dBx)
+        h_t = P * h[:, None] + Q                            # [B,c,di,N]
+        y = jnp.einsum("bcdn,bcn->bcd", h_t, c_c)
+        return h_t[:, -1], y
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    h_final, ys = jax.lax.scan(body, h0, jnp.arange(n_chunks),
+                               unroll=n_chunks if cfg.full_unroll else 1)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, L, di)
+    y = y + p["D_skip"]["w"].astype(jnp.float32) * x32
+    y = (y.astype(cd)) * jax.nn.silu(z)
+    y = constrain(y, ("batch", None, "ssm_inner"))
+    out = apply_linear(p["out_proj"], y, cd)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv_state.astype(cache["conv"].dtype),
+                     "ssm": h_final.astype(cache["ssm"].dtype)}
+    return out, new_cache
+
+
+# ===================================================================== RWKV6
+def rwkv_tm_specs(cfg) -> dict:
+    D = cfg.d_model
+    lora = 64
+    return {
+        "mix": {"w": ShardedInit((5, D), (None, "embed"), "normal", 0.1)},
+        "wr": linear_specs(D, D, "embed", "ssm_inner"),
+        "wk": linear_specs(D, D, "embed", "ssm_inner"),
+        "wv": linear_specs(D, D, "embed", "ssm_inner"),
+        "wg": linear_specs(D, D, "embed", "ssm_inner"),
+        "w0": {"w": ShardedInit((D,), ("ssm_inner",), "zeros")},
+        "w_lora_a": {"w": ShardedInit((D, lora), ("embed", "lora"))},
+        "w_lora_b": {"w": ShardedInit((lora, D), ("lora", "ssm_inner"),
+                                      "normal", 0.1)},
+        "u": {"w": ShardedInit((D,), ("ssm_inner",), "normal", 0.5)},
+        "ln_x": rmsnorm_specs(D),
+        "wo": linear_specs(D, D, "ssm_inner", "embed"),
+    }
+
+
+def rwkv_cm_specs(cfg) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    return {
+        "mix": {"w": ShardedInit((2, D), (None, "embed"), "normal", 0.1)},
+        "wk": linear_specs(D, F, "embed", "mlp"),
+        "wv": linear_specs(F, D, "mlp", "embed"),
+        "wr": linear_specs(D, D, "embed", None),
+    }
+
+
+def rwkv_cache_spec(cfg, batch: int, max_seq: int) -> dict:
+    D = cfg.d_model
+    hd = cfg.ssm.rwkv_head_dim
+    H = D // hd
+    return {
+        "shift_tm": ShardedInit((batch, D), ("batch", "embed"), "zeros"),
+        "shift_cm": ShardedInit((batch, D), ("batch", "embed"), "zeros"),
+        "wkv": ShardedInit((batch, H, hd, hd),
+                           ("batch", "heads", None, None), "zeros"),
+    }
+
+
+def _token_shift(x, prev):
+    """prev: [B, D] last token of previous step (zeros at sequence start)."""
+    shifted = jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+    return shifted
+
+
+def wkv6_scan(r, k, v, w, u, state):
+    """Serial WKV6 recurrence (the semantic reference; Pallas kernel is the
+    chunked TPU form). r/k/v/w: [B,L,H,hd] fp32; u: [H,hd]; state [B,H,hd,hd].
+
+    y_t = r_t · (S_{t-1} + diag(u) k_t v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    """
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                            # [B,H,hd]
+        kv = k_t[..., :, None] * v_t[..., None, :]          # [B,H,hd,hd]
+        y = jnp.einsum("bhi,bhij->bhj", r_t, S + u[..., None] * kv)
+        S_new = w_t[..., None] * S + kv
+        return S_new, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w))
+    S_final, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1), S_final                  # [B,L,H,hd]
+
+
+def wkv6_chunked(r, k, v, logw, u, state, *, chunk: int = 32,
+                 unroll: bool = False):
+    """Chunked parallel WKV6 — the TPU-native form (also the shape of the
+    Pallas kernel). All decay factors are exp of *differences* of cumulative
+    log-decays, which are always <= 0, so no overflow at any chunk size.
+
+    r/k/v: [B,L,H,hd] fp32; logw: [B,L,H,hd] (log of per-step decay, <= 0);
+    u: [H,hd]; state: [B,H,hd,hd]. Returns (y [B,L,H,hd], final state).
+    """
+    Bsz, L, H, hd = r.shape
+    from repro.sharding import fit_chunk
+    chunk = fit_chunk(L, chunk)
+    n_chunks = L // chunk
+
+    def body(S, ci):
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, ci * chunk, chunk, 1)
+        r_c, k_c, v_c, lw = sl(r), sl(k), sl(v), sl(logw)
+        cum = jnp.cumsum(lw, axis=1)                       # logP_t, [B,c,H,hd]
+        cum_shift = cum - lw                               # logP_{t-1}
+        # intra-chunk attention-like matrix (strictly causal) + u-bonus diag:
+        # A[t,s] = sum_d r_t k_s exp(logP_{t-1} - logP_s)   (t > s)
+        decay_diff = cum_shift[:, :, None] - cum[:, None]  # [B,t,s,H,hd]
+        t_idx = jnp.arange(chunk)
+        strict = (t_idx[:, None] > t_idx[None, :])[None, :, :, None, None]
+        factor = jnp.exp(jnp.where(strict, decay_diff, 0.0)) * strict
+        A = jnp.einsum("bthd,bshd,btshd->btsh", r_c, k_c, factor)
+        diag = jnp.einsum("bthd,bthd,hd->bth", r_c, k_c,
+                          u.astype(r.dtype))
+        A = A + diag[:, :, None] * jnp.eye(chunk)[None, :, :, None]
+        y = jnp.einsum("btsh,bshd->bthd", A, v_c)
+        # cross-chunk: y += (r_t * P_{t-1}) . S
+        r_dec = r_c * jnp.exp(cum_shift)
+        y = y + jnp.einsum("bthi,bhij->bthj", r_dec, S)
+        # state update: S' = P_last * S + sum_s (P_last / P_s) k_s v_s^T
+        last = cum[:, -1:]
+        k_dec = k_c * jnp.exp(last - cum)
+        S_new = jnp.exp(last[:, 0])[..., None] * S + \
+            jnp.einsum("bshi,bshj->bhij", k_dec, v_c)
+        return S_new, y
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    S_final, ys = jax.lax.scan(body, state, jnp.arange(n_chunks),
+                               unroll=n_chunks if unroll else 1)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, L, H, hd)
+    return y, S_final
+
+
+def rwkv_tm_forward(cfg, p, x, *, cache=None, use_pallas=False, **_):
+    B, L, D = x.shape
+    hd = cfg.ssm.rwkv_head_dim
+    H = D // hd
+    cd = dt(cfg, "compute")
+    prev = cache["shift_tm"].astype(x.dtype) if cache is not None else \
+        jnp.zeros((B, D), x.dtype)
+    xs = _token_shift(x, prev)
+    mix = p["mix"]["w"].astype(x.dtype)                     # [5, D]
+    xr, xk, xv, xw, xg = (x + (xs - x) * mix[i] for i in range(5))
+    r = apply_linear(p["wr"], xr, cd).reshape(B, L, H, hd)
+    k = apply_linear(p["wk"], xk, cd).reshape(B, L, H, hd)
+    v = apply_linear(p["wv"], xv, cd).reshape(B, L, H, hd)
+    g = apply_linear(p["wg"], xg, cd)
+    # data-dependent decay (the RWKV6 signature): w = exp(-exp(w0 + lora(xw)))
+    lora = jnp.einsum("bld,dk->blk", xw.astype(cd), p["w_lora_a"]["w"].astype(cd))
+    lora = jnp.einsum("blk,kd->bld", jnp.tanh(lora), p["w_lora_b"]["w"].astype(cd))
+    raw = p["w0"]["w"].astype(jnp.float32) + lora.astype(jnp.float32)
+    decay_log = -jnp.exp(jnp.clip(raw, -8.0, 4.0)).reshape(B, L, H, hd)
+    w = jnp.exp(decay_log)
+    u = p["u"]["w"].astype(jnp.float32).reshape(H, hd)
+
+    state = (cache["wkv"].astype(jnp.float32) if cache is not None else
+             jnp.zeros((B, H, hd, hd), jnp.float32))
+    r32, k32, v32 = (a.astype(jnp.float32) for a in (r, k, v))
+    if use_pallas and cache is None:
+        from repro.kernels.rwkv import ops as rwkv_ops
+        y, S = rwkv_ops.wkv6(r32, k32, v32, decay_log, u, state)
+    elif cfg.chunked_wkv and cache is None and L > 1:
+        y, S = wkv6_chunked(r32, k32, v32, decay_log, u, state,
+                            chunk=cfg.wkv_chunk, unroll=cfg.full_unroll)
+    else:
+        y, S = wkv6_scan(r32, k32, v32, w, u, state)
+    # per-head groupnorm
+    y32 = y.reshape(B, L, H, hd)
+    mu = y32.mean(-1, keepdims=True)
+    var = y32.var(-1, keepdims=True)
+    y32 = (y32 - mu) * jax.lax.rsqrt(var + 64e-5)
+    y_n = (y32.reshape(B, L, D) * p["ln_x"]["scale"].astype(jnp.float32))
+    out = apply_linear(p["wo"], y_n.astype(cd) * jax.nn.silu(g), cd)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"shift_tm": x[:, -1].astype(cache["shift_tm"].dtype),
+                     "wkv": S.astype(cache["wkv"].dtype)}
+    return out, new_cache
+
+
+def rwkv_cm_forward(cfg, p, x, *, cache=None, **_):
+    B, L, D = x.shape
+    cd = dt(cfg, "compute")
+    prev = cache["shift_cm"].astype(x.dtype) if cache is not None else \
+        jnp.zeros((B, D), x.dtype)
+    xs = _token_shift(x, prev)
+    mix = p["mix"]["w"].astype(x.dtype)
+    xk, xr = x + (xs - x) * mix[0], x + (xs - x) * mix[1]
+    k = jnp.square(jax.nn.relu(apply_linear(p["wk"], xk, cd)))
+    k = constrain(k, ("batch", None, "mlp"))
+    vv = apply_linear(p["wv"], k, cd)
+    out = jax.nn.sigmoid(apply_linear(p["wr"], xr, cd)) * vv
+    new_cache = None
+    if cache is not None:
+        new_cache = {"shift_cm": x[:, -1].astype(cache["shift_cm"].dtype)}
+    return out, new_cache

@@ -1,0 +1,3 @@
+from repro.optim.optimizers import Optimizer, adamw, adam, sgd, init_opt_state
+
+__all__ = ["Optimizer", "adamw", "adam", "sgd", "init_opt_state"]

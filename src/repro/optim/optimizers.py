@@ -1,0 +1,82 @@
+"""Pure-JAX pytree optimizers: SGD(+momentum), Adam, AdamW.
+
+Moments are fp32 regardless of param dtype (bf16 params + fp32 moments is the
+memory layout assumed in the roofline analysis: 10 bytes/param for AdamW).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], dict]
+    update: Callable[[Any, dict, Any], tuple[Any, dict]]
+    slots: int          # number of fp32 moment trees (for memory accounting)
+
+
+def _tree_zeros_like_f32(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def sgd(lr: float = 0.1, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32),
+                "mu": _tree_zeros_like_f32(params)}
+
+    def update(grads, state, params):
+        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                          state["mu"], grads)
+        new_p = jax.tree.map(lambda p, m: (p.astype(jnp.float32)
+                                           - lr * m).astype(p.dtype),
+                             params, mu)
+        return new_p, {"count": state["count"] + 1, "mu": mu}
+
+    return Optimizer("sgd", init, update, slots=1)
+
+
+def adam(lr: float = 1e-3, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32),
+                "mu": _tree_zeros_like_f32(params),
+                "nu": _tree_zeros_like_f32(params)}
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        bc1 = 1.0 - b1 ** c.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** c.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * jnp.square(g32)
+            step = lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                step = step + lr * weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - step).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+        leaves, treedef = jax.tree.flatten(
+            out, is_leaf=lambda x: isinstance(x, tuple))
+        new_p = treedef.unflatten([l[0] for l in leaves])
+        mu = treedef.unflatten([l[1] for l in leaves])
+        nu = treedef.unflatten([l[2] for l in leaves])
+        return new_p, {"count": c, "mu": mu, "nu": nu}
+
+    return Optimizer("adam" if not weight_decay else "adamw",
+                     init, update, slots=2)
+
+
+def adamw(lr: float = 1e-3, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.01) -> Optimizer:
+    return adam(lr, b1, b2, eps, weight_decay)
+
+
+def init_opt_state(optimizer: Optimizer, params) -> dict:
+    return optimizer.init(params)

@@ -1,0 +1,6 @@
+from repro.sched.throughput import ModelProfile, PROFILES, throughput
+from repro.sched.simulator import ClusterSimulator, Job
+from repro.sched.tiresias import ElasticTiresias, Tiresias
+
+__all__ = ["ModelProfile", "PROFILES", "throughput", "ClusterSimulator",
+           "Job", "Tiresias", "ElasticTiresias"]

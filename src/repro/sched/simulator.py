@@ -1,0 +1,187 @@
+"""Discrete-event multi-tenant GPU cluster simulator.
+
+Jobs demand ``total_samples`` of work; a job allocated p GPUs progresses at
+``throughput(model, p)`` samples/s. Parallelism changes cost:
+
+  * EDL            — stop-free: existing GPUs lose only ``edl_stop_s``
+                     (default 0.5 s); newly added GPUs additionally pay
+                     ``context_prep_s`` before contributing (that loss is
+                     inevitable, §6.1).
+  * stop-resume    — ALL GPUs idle for ``context_prep_s`` on every change.
+
+The scheduler (Tiresias / Elastic-Tiresias / static) is a pluggable policy
+called on every event; it returns the new allocation map.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable
+
+from repro.sched.throughput import throughput
+
+
+@dataclasses.dataclass
+class Job:
+    jid: int
+    model: str
+    requested_p: int
+    total_samples: float
+    arrival: float
+    inelastic: bool = False
+    # runtime state
+    alloc: int = 0
+    remaining: float = 0.0
+    attained_gpu_s: float = 0.0     # Tiresias service metric
+    start_time: float | None = None
+    finish_time: float | None = None
+    frozen_until: float = 0.0       # scaling overhead window
+
+    def __post_init__(self):
+        self.remaining = self.total_samples
+
+
+@dataclasses.dataclass
+class ScalingCosts:
+    edl_stop_s: float = 0.5
+    context_prep_s: float = 35.0    # stop-resume full restart / new-worker prep
+    mode: str = "edl"               # edl | stop_resume
+
+
+class ClusterSimulator:
+    def __init__(self, n_gpus: int, jobs: list[Job], policy,
+                 *, costs: ScalingCosts | None = None, quantum: float = 30.0,
+                 t_end: float = 10e6):
+        self.n_gpus = n_gpus
+        self.jobs = {j.jid: j for j in jobs}
+        self.policy = policy
+        self.costs = costs or ScalingCosts()
+        self.quantum = quantum
+        self.t_end = t_end
+        self.now = 0.0
+        self.pending: list[Job] = []
+        self.running: dict[int, Job] = {}
+        self.finished: list[Job] = []
+        self.events: list[tuple[float, int, str, int]] = []
+        self._seq = 0
+        self.utilization_log: list[tuple[float, int, float]] = []
+        self._arrivals_left = len(jobs)
+        for j in jobs:
+            self._push(j.arrival, "arrival", j.jid)
+
+    # ----------------------------------------------------------- event queue
+    def _push(self, t: float, kind: str, jid: int = -1):
+        self._seq += 1
+        heapq.heappush(self.events, (t, self._seq, kind, jid))
+
+    # ----------------------------------------------------------- mechanics
+    def _advance_progress(self, dt: float):
+        if dt <= 0:
+            return
+        for j in self.running.values():
+            eff_dt = dt
+            if j.frozen_until > self.now - dt:
+                eff_dt = max(0.0, self.now - j.frozen_until)
+            if j.alloc > 0 and eff_dt > 0:
+                j.remaining -= throughput(j.model, j.alloc) * eff_dt
+            j.attained_gpu_s += j.alloc * dt
+        used = sum(j.alloc for j in self.running.values())
+        eff = sum(self._job_eff(j) for j in self.running.values())
+        self.utilization_log.append((self.now, used, eff))
+
+    def _job_eff(self, j: Job) -> float:
+        from repro.sched.throughput import efficiency
+        return j.alloc * efficiency(j.model, j.alloc) if j.alloc else 0.0
+
+    def _apply_alloc(self, new_alloc: dict[int, int]):
+        for jid, p in new_alloc.items():
+            j = self.jobs[jid]
+            old = j.alloc
+            if p == old:
+                continue
+            if p == 0:          # preempted
+                j.alloc = 0
+                self.running.pop(jid, None)
+                if j.remaining > 0 and j not in self.pending:
+                    self.pending.append(j)
+                continue
+            if old == 0:
+                self.pending = [x for x in self.pending if x.jid != jid]
+                self.running[jid] = j
+                if j.start_time is None:
+                    j.start_time = self.now
+                j.frozen_until = self.now + self.costs.context_prep_s \
+                    if self.costs.mode == "stop_resume" else self.now
+                # fresh placement always pays prep on the new GPUs; with EDL
+                # there are no existing GPUs to keep running, so model it as
+                # the job starting after a prep delay on either mode:
+                j.frozen_until = self.now + min(self.costs.context_prep_s, 5.0)
+            else:               # resize
+                if self.costs.mode == "stop_resume":
+                    j.frozen_until = self.now + self.costs.context_prep_s
+                else:
+                    j.frozen_until = self.now + self.costs.edl_stop_s
+            j.alloc = p
+            self._schedule_completion(j)
+
+    def _schedule_completion(self, j: Job):
+        if j.alloc <= 0 or j.remaining <= 0:
+            return
+        lead = max(j.frozen_until - self.now, 0.0)
+        t_done = self.now + lead + j.remaining / throughput(j.model, j.alloc)
+        self._push(t_done, "maybe_done", j.jid)
+
+    # -------------------------------------------------------------- driver
+    def run(self):
+        last_t = 0.0
+        self._tick_pending = False
+        while self.events:
+            t, _, kind, jid = heapq.heappop(self.events)
+            if t > self.t_end:
+                break
+            self.now = t
+            self._advance_progress(t - last_t)
+            last_t = t
+            if kind == "arrival":
+                self.pending.append(self.jobs[jid])
+                self._arrivals_left -= 1
+            elif kind == "maybe_done":
+                j = self.jobs[jid]
+                if j.finish_time is not None or j.alloc <= 0:
+                    continue        # stale wake-up
+                if j.remaining <= 1e-6:
+                    j.finish_time = self.now
+                    j.alloc = 0
+                    self.running.pop(jid, None)
+                    self.finished.append(j)
+                else:               # progress was slowed by a resize window
+                    self._schedule_completion(j)
+                    continue
+            elif kind == "tick":
+                self._tick_pending = False
+            new_alloc = self.policy(self)
+            if new_alloc:
+                self._apply_alloc(new_alloc)
+            # ticks drive re-scheduling (compaction/expansion/starvation);
+            # with nothing pending and no arrivals ahead they are no-ops —
+            # skipping them removes the O(makespan/quantum) idle-tail events
+            if self.running and not self._tick_pending and \
+                    (self.pending or self._arrivals_left):
+                self._push(self.now + self.quantum, "tick")
+                self._tick_pending = True
+        return self.stats()
+
+    # ------------------------------------------------------------- results
+    def stats(self) -> dict:
+        jcts = [j.finish_time - j.arrival for j in self.finished]
+        jcts.sort()
+        if not jcts:
+            return {"finished": 0}
+        import numpy as np
+        return {
+            "finished": len(jcts),
+            "mean_jct": float(np.mean(jcts)),
+            "median_jct": float(np.median(jcts)),
+            "p95_jct": float(np.percentile(jcts, 95)),
+            "makespan": max(j.finish_time for j in self.finished),
+        }

@@ -1,0 +1,66 @@
+"""Analytical throughput / GPU-efficiency model t(p) for the cluster
+simulator — the paper's Fig-1 shape: throughput grows sublinearly with p
+(ring-allreduce communication) and per-GPU efficiency decays; large models
+(VGG) even lose absolute throughput past a knee.
+
+step_time(p) = t_compute + 2 (p-1)/p * model_bytes / bw + c_latency * p
+throughput(p) = p * per_gpu_batch / step_time(p)
+
+Profiles approximate tf_cnn_benchmarks models (the paper's workload pool).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelProfile:
+    name: str
+    t_compute: float        # s per per-GPU batch (forward+backward)
+    model_gb: float         # parameter bytes in GB
+    per_gpu_batch: int
+    bw_gbps: float = 12.0   # effective allreduce bandwidth GB/s
+    latency_s: float = 0.002
+
+
+PROFILES: dict[str, ModelProfile] = {p.name: p for p in [
+    ModelProfile("alexnet", 0.020, 0.24, 512),
+    ModelProfile("vgg16", 0.180, 0.55, 64),
+    ModelProfile("vgg19", 0.210, 0.57, 64),
+    ModelProfile("resnet50", 0.120, 0.10, 64),
+    ModelProfile("resnet101", 0.200, 0.17, 64),
+    ModelProfile("resnet152", 0.280, 0.23, 64),
+    ModelProfile("inception3", 0.160, 0.10, 64),
+    ModelProfile("inception4", 0.300, 0.17, 64),
+    ModelProfile("googlenet", 0.060, 0.03, 128),
+]}
+
+
+@functools.lru_cache(maxsize=None)
+def step_time(name: str, p: int) -> float:
+    m = PROFILES[name]
+    # (1 + p/16): ring contention / cross-machine hop penalty — gives the
+    # paper's Fig-1 VGG knee (throughput stops scaling past ~8 GPUs)
+    comm = (2.0 * (p - 1) / p * m.model_gb / m.bw_gbps * (1.0 + p / 16.0)
+            + m.latency_s * p)
+    return m.t_compute + (comm if p > 1 else 0.0)
+
+
+@functools.lru_cache(maxsize=None)
+def throughput(name: str, p: int) -> float:
+    """samples/s at parallelism p (weak scaling: per-GPU batch constant)."""
+    if p <= 0:
+        return 0.0
+    m = PROFILES[name]
+    return p * m.per_gpu_batch / step_time(name, p)
+
+
+@functools.lru_cache(maxsize=None)
+def best_per_gpu(name: str, max_p: int = 64) -> float:
+    return max(throughput(name, p) / p for p in range(1, max_p + 1))
+
+
+def efficiency(name: str, p: int) -> float:
+    """The paper's GPU efficiency: t(p) / t(p*) of per-GPU throughput."""
+    return (throughput(name, p) / p) / best_per_gpu(name)

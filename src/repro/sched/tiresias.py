@@ -1,0 +1,114 @@
+"""Tiresias (Gu et al., NSDI'19) and Elastic-Tiresias (EDL §5.1).
+
+Tiresias: discretized two-dimensional attained service (priority groups
+G0..Gk with service quanta); shortest-job-first-like, preemptive, starvation
+guard. Jobs run at their requested parallelism or wait.
+
+Elastic-Tiresias adds two rules:
+  R1 Compaction — when > N jobs wait, scale running jobs in (never below
+     ceil(r * requested_p), never jobs in G0) to free GPUs for the head of
+     the queue, choosing removals that maximize the GPU-efficiency gain.
+  R2 Expansion — when GPUs idle and nothing waits, greedily give +1 GPU to
+     the job with the largest marginal throughput gain, while positive.
+"""
+from __future__ import annotations
+
+import math
+
+from repro.sched.throughput import efficiency, throughput
+
+
+class Tiresias:
+    def __init__(self, quanta=(500.0, 10_000.0), starvation_s: float = 3600.0,
+                 elastic: bool = False, N: int = 10, r: float = 0.5):
+        self.quanta = quanta
+        self.starvation_s = starvation_s
+        self.elastic = elastic
+        self.N = N
+        self.r = r
+
+    # ------------------------------------------------------------ priority
+    def group_of(self, job) -> int:
+        for g, q in enumerate(self.quanta):
+            if job.attained_gpu_s < q:
+                return g
+        return len(self.quanta)
+
+    def _priority_key(self, sim, job):
+        starved = (job.start_time is None and
+                   sim.now - job.arrival > self.starvation_s)
+        return (0 if starved else self.group_of(job), job.arrival)
+
+    # ------------------------------------------------------------ schedule
+    def __call__(self, sim) -> dict[int, int]:
+        jobs = [j for j in list(sim.running.values()) + sim.pending
+                if j.finish_time is None]
+        jobs.sort(key=lambda j: self._priority_key(sim, j))
+        alloc: dict[int, int] = {}
+        free = sim.n_gpus
+        waiting = []
+        for j in jobs:
+            if free >= j.requested_p:
+                alloc[j.jid] = j.requested_p
+                free -= j.requested_p
+            else:
+                alloc[j.jid] = 0
+                waiting.append(j)
+
+        if self.elastic:
+            alloc, free = self._compact(sim, jobs, alloc, free, waiting)
+            alloc = self._expand(sim, jobs, alloc, free, waiting)
+        return alloc
+
+    # ---------------------------------------------------------------- R1
+    def _compact(self, sim, jobs, alloc, free, waiting):
+        if len(waiting) <= self.N:
+            return alloc, free
+        for pending in list(waiting):
+            # scan running jobs (lowest priority first), shrink until the
+            # pending job fits; respect G0-protection and the QoS floor.
+            donors = sorted(
+                (j for j in jobs if alloc.get(j.jid, 0) > 0
+                 and not j.inelastic and self.group_of(j) > 0),
+                key=lambda j: -self.group_of(j))
+            for d in donors:
+                floor = max(1, math.ceil(self.r * d.requested_p))
+                while alloc[d.jid] > floor and free < pending.requested_p:
+                    # remove the GPU whose removal gains the most efficiency
+                    p = alloc[d.jid]
+                    gain = efficiency(d.model, p - 1) - efficiency(d.model, p)
+                    if gain < 0 and free > 0:
+                        break   # shrinking would hurt; try next donor
+                    alloc[d.jid] -= 1
+                    free += 1
+                if free >= pending.requested_p:
+                    break
+            if free >= pending.requested_p:
+                alloc[pending.jid] = pending.requested_p
+                free -= pending.requested_p
+                waiting.remove(pending)
+        return alloc, free
+
+    # ---------------------------------------------------------------- R2
+    def _expand(self, sim, jobs, alloc, free, waiting):
+        if waiting:
+            return alloc
+        while free > 0:
+            best, best_gain = None, 0.0
+            for j in jobs:
+                p = alloc.get(j.jid, 0)
+                if p == 0 or j.inelastic:
+                    continue
+                s_p = throughput(j.model, p)
+                gain = (throughput(j.model, p + 1) - s_p) / s_p
+                if gain > best_gain:
+                    best, best_gain = j, gain
+            if best is None:
+                break
+            alloc[best.jid] += 1
+            free -= 1
+        return alloc
+
+
+def ElasticTiresias(**kw) -> Tiresias:
+    return Tiresias(elastic=True, **kw)

@@ -1,0 +1,6 @@
+from repro.training.step import (batch_sharding, init_train_state,
+                                 make_train_step, state_sharding,
+                                 state_shape_structs)
+
+__all__ = ["batch_sharding", "init_train_state", "make_train_step",
+           "state_sharding", "state_shape_structs"]

@@ -1,0 +1,113 @@
+"""Training step + sharding builders.
+
+TrainState = {"params": tree, "opt": {"count", "mu"[, "nu"]}, "step": i32}.
+Moments shard exactly like their parameters; the global batch dim shards over
+the elastic ``(pod, data)`` axes — resizing that axis is what EDL elasticity
+does, and because the global batch is constant the step math is identical at
+any parallelism (tested in tests/test_elastic.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import model as M
+from repro.optim import Optimizer
+from repro.sharding import spec_for
+
+
+def init_train_state(cfg, optimizer: Optimizer, key) -> dict:
+    params = M.init_params(cfg, key)
+    return {"params": params, "opt": optimizer.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def make_train_step(cfg, optimizer: Optimizer, use_pallas: bool = False):
+    def train_step(state, batch):
+        def lf(p):
+            return M.loss_fn(cfg, p, batch, use_pallas=use_pallas)
+        (loss, parts), grads = jax.value_and_grad(lf, has_aux=True)(
+            state["params"])
+        # pin gradient shardings to the parameter shardings: the data-axis
+        # reduction lowers as reduce-scatter (ZeRO) instead of all-reduce
+        from repro.models.model import param_logical_axes
+        from repro.sharding import constrain
+        axes = param_logical_axes(cfg)
+        grads = jax.tree.map(
+            lambda g, a: constrain(g, a), grads, axes,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x))
+        new_params, new_opt = optimizer.update(grads, state["opt"],
+                                               state["params"])
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        metrics = {"loss": loss, "xent": parts["xent"], "aux": parts["aux"],
+                   "grad_norm": gnorm}
+        return ({"params": new_params, "opt": new_opt,
+                 "step": state["step"] + 1}, metrics)
+
+    return train_step
+
+
+# ------------------------------------------------------------- shardings
+def params_sharding(cfg, mesh: Mesh):
+    axes = M.param_logical_axes(cfg)
+    shapes = M.param_shape_structs(cfg)
+    return jax.tree.map(
+        lambda a, s: NamedSharding(mesh, spec_for(a, s.shape, mesh)),
+        axes, shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def state_sharding(cfg, mesh: Mesh, optimizer: Optimizer) -> dict:
+    ps = params_sharding(cfg, mesh)
+    repl = NamedSharding(mesh, P())
+    opt = {"count": repl, "mu": ps}
+    if optimizer.slots >= 2:
+        opt["nu"] = ps
+    return {"params": ps, "opt": opt, "step": repl}
+
+
+def state_shape_structs(cfg, optimizer: Optimizer) -> dict:
+    """Abstract TrainState for AOT lowering (no allocation)."""
+    p = M.param_shape_structs(cfg)
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    i32 = jax.ShapeDtypeStruct((), jnp.int32)
+    opt = {"count": i32, "mu": jax.tree.map(f32, p)}
+    # default optimizer assumed adamw (2 slots) for the dry-run
+    opt["nu"] = jax.tree.map(f32, p)
+    return {"params": p, "opt": opt, "step": i32}
+
+
+def batch_sharding(cfg, mesh: Mesh, batch_specs: dict,
+                   cache_shape: tuple[int, int] | None = None) -> dict:
+    """Shardings for a model-input dict. ``cache_shape=(batch, max_seq)`` must
+    be given when the dict contains a decode cache."""
+    def one(spec):
+        axes = ("batch",) + (None,) * (len(spec.shape) - 1)
+        return NamedSharding(mesh, spec_for(axes, spec.shape, mesh))
+
+    out = {}
+    for k, v in batch_specs.items():
+        if k == "cache":
+            assert cache_shape is not None
+            out[k] = cache_sharding(cfg, mesh, *cache_shape)
+        else:
+            out[k] = one(v)
+    return out
+
+
+def cache_sharding(cfg, mesh: Mesh, batch: int, max_seq: int):
+    from repro.models.cache import cache_logical_axes, cache_specs
+    axes = cache_logical_axes(cfg, batch, max_seq)
+    specs = cache_specs(cfg, batch, max_seq)
+    return jax.tree.map(
+        lambda a, s: NamedSharding(mesh, spec_for(a, s.shape, mesh)),
+        axes, specs,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))

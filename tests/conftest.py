@@ -1,0 +1,7 @@
+import os
+import sys
+
+# NOTE: device-count flags are deliberately NOT set here — smoke tests run on
+# the single real CPU device. Integration tests that need a multi-device host
+# platform (elastic scaling) spawn subprocesses that set XLA_FLAGS themselves.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

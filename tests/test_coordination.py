@@ -1,0 +1,110 @@
+"""Coordination store + leader election (EDL §4.1): CAS transactions, TTL
+lease expiry, re-election, graceful resign/hand-off."""
+from repro.core.coordination import CoordinationStore
+from repro.core.election import LeaderElection
+from repro.core.membership import Membership, StragglerDetector
+from repro.core.scaling import Busy, ScalingController
+
+
+class VirtualClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_cas_semantics():
+    s = CoordinationStore()
+    assert s.cas("k", None, "a")
+    assert not s.cas("k", None, "b")      # already set
+    assert s.cas("k", "a", "b")
+    assert s.get("k") == "b"
+
+
+def test_ttl_expiry_and_refresh():
+    clk = VirtualClock()
+    s = CoordinationStore(clock=clk)
+    s.put("lease", "v", ttl=5.0)
+    clk.t = 4.0
+    assert s.get("lease") == "v"
+    assert s.refresh("lease", 5.0)
+    clk.t = 8.5
+    assert s.get("lease") == "v"          # refreshed to t=9
+    clk.t = 9.5
+    assert s.get("lease") is None         # expired
+    assert not s.refresh("lease", 5.0)
+
+
+def test_election_first_writer_wins_and_reelect():
+    clk = VirtualClock()
+    s = CoordinationStore(clock=clk)
+    e0 = LeaderElection(s, "job", "w0", ttl=5.0)
+    e1 = LeaderElection(s, "job", "w1", ttl=5.0)
+    r0 = e0.elect()
+    r1 = e1.elect()
+    assert r0.is_self and r0.leader_id == "w0"
+    assert not r1.is_self and r1.leader_id == "w0"
+    # leader dies: lease lapses -> w1 wins the next election
+    clk.t = 6.0
+    r1b = e1.elect()
+    assert r1b.is_self and r1b.leader_id == "w1"
+
+
+def test_resign_handoff():
+    s = CoordinationStore()
+    e0 = LeaderElection(s, "job", "w0")
+    e1 = LeaderElection(s, "job", "w1")
+    assert e0.elect().is_self
+    e0.resign()                           # leader scales in (§4.2)
+    assert e1.elect().is_self
+
+
+def test_expiry_watch_fires():
+    clk = VirtualClock()
+    s = CoordinationStore(clock=clk)
+    fired = []
+    e = LeaderElection(s, "job", "w0", ttl=2.0)
+    e.elect()
+    e.watch_expiry(lambda: fired.append(1))
+    clk.t = 3.0
+    s.sweep()
+    assert fired
+
+
+def test_membership_liveness_from_sync_recency():
+    m = Membership(miss_threshold=2)
+    m.register("w0", 0)
+    m.register("w1", 1)
+    for step in range(1, 5):
+        m.sync("w0", step, 0.1)
+    m.sync("w1", 1, 0.1)                  # w1 stopped syncing after step 1
+    assert m.dead_workers(current_step=4) == ["w1"]
+
+
+def test_straggler_detector_consecutive_window():
+    d = StragglerDetector(ratio=1.2, window=3)
+    times = {"w0": 0.10, "w1": 0.10, "w2": 0.10, "w3": 0.20}
+    assert d.observe(times) == []
+    assert d.observe(times) == []
+    assert d.observe(times) == ["w3"]     # third consecutive strike
+    # a recovered worker resets its strikes
+    d2 = StragglerDetector(ratio=1.2, window=2)
+    d2.observe(times)
+    d2.observe({**times, "w3": 0.1})
+    assert d2.observe(times) == []
+
+
+def test_scaling_sequential_admission():
+    c = ScalingController()
+    c.admit("scale_out", 2, 4)
+    try:
+        c.admit("scale_in", 4, 2)
+        assert False, "second op must be rejected with Busy (RETRY)"
+    except Busy:
+        pass
+    c.prepared(switch_step=10, exec_handle=object())
+    c.begin_switch()
+    rec = c.complete()
+    assert rec.op == "scale_out" and rec.switch_step == 10
+    c.admit("scale_in", 4, 2)             # idle again -> admitted

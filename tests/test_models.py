@@ -1,0 +1,148 @@
+"""Per-architecture smoke tests: a REDUCED same-family variant of each of the
+10 assigned architectures runs one forward/loss/train-step on CPU, asserting
+output shapes and no NaNs; decode consistency against teacher forcing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import model as M
+from repro.models.cache import init_cache
+from repro.optim import adamw
+from repro.training.step import init_train_state, make_train_step
+
+B, L = 2, 64
+
+
+def _batch(cfg, key, length=L):
+    if cfg.frontend == "embeds":
+        return {"embeds": jax.random.normal(
+            key, (B, length, cfg.d_model), jnp.float32) * 0.02,
+            "labels": jax.random.randint(key, (B, length), 0, cfg.vocab)}
+    return {"tokens": jax.random.randint(key, (B, length), 0, cfg.vocab),
+            "labels": jax.random.randint(key, (B, length), 0, cfg.vocab)}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_loss(arch):
+    cfg = get_config(arch, smoke=True)
+    assert cfg.n_layers <= 2 and cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.n_experts <= 4
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    loss, parts = M.loss_fn(cfg, params, _batch(cfg, key))
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+    # a random model should sit near ln(vocab)
+    assert abs(float(parts["xent"]) - np.log(cfg.vocab)) < 2.0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    key = jax.random.PRNGKey(1)
+    opt = adamw(1e-3)
+    state = init_train_state(cfg, opt, key)
+    step = jax.jit(make_train_step(cfg, opt))
+    batch = _batch(cfg, key)
+    l0 = None
+    for _ in range(3):
+        state, metrics = step(state, batch)
+        assert np.isfinite(float(metrics["loss"]))
+        l0 = l0 or float(metrics["loss"])
+    assert float(metrics["loss"]) < l0          # memorizing one batch
+    assert int(state["step"]) == 3
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode_shapes(arch):
+    cfg = get_config(arch, smoke=True)
+    key = jax.random.PRNGKey(2)
+    params = M.init_params(cfg, key)
+    cache = init_cache(cfg, B, 32, pos=3)
+    tok = ({"embeds": jax.random.normal(key, (B, 1, cfg.d_model),
+                                        jnp.float32)}
+           if cfg.frontend == "embeds"
+           else {"tokens": jnp.ones((B, 1), jnp.int32)})
+    ids, new_cache = M.serve_step(cfg, params, tok, cache)
+    assert ids.shape == (B,)
+    assert int(new_cache["pos"]) == 4
+    assert not any(bool(jnp.isnan(x).any()) for x in
+                   jax.tree.leaves(new_cache)
+                   if jnp.issubdtype(x.dtype, jnp.floating))
+
+
+@pytest.mark.parametrize("arch", ["phi3_mini_3p8b", "rwkv6_1p6b",
+                                  "jamba_v01_52b", "starcoder2_15b",
+                                  "mistral_nemo_12b"])
+def test_decode_matches_teacher_forcing(arch):
+    """Step-by-step decode logits == teacher-forced logits (non-MoE archs;
+    MoE differs by capacity-drop semantics between grouped/1-token routing).
+    jamba's MoE layer uses top2-of-4 on tiny dims — tolerate more there."""
+    cfg = get_config(arch, smoke=True)
+    key = jax.random.PRNGKey(3)
+    params = M.init_params(cfg, key)
+    toks = jax.random.randint(key, (B, 12), 0, cfg.vocab)
+    hidden, _ = M.forward(cfg, params, {"tokens": toks}, mode="train")
+    from repro.models.layers import apply_linear
+    ref = apply_linear(params["unembed"], hidden, jnp.float32)
+    cache = init_cache(cfg, B, 12)
+    outs = []
+    for t in range(12):
+        lg, cache = M.forward(cfg, params, {"tokens": toks[:, t:t + 1]},
+                              mode="decode", cache=cache)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, 1)
+    tol = 5e-2 if cfg.moe else 1e-4
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(dec), atol=tol,
+                               rtol=tol)
+
+
+def test_swa_pruned_equals_masked():
+    """The window-pruned SWA path must equal the masked full computation."""
+    import dataclasses
+    cfg = get_config("starcoder2_15b", smoke=True)
+    key = jax.random.PRNGKey(4)
+    params = M.init_params(cfg, key)
+    batch = _batch(cfg, key, length=128)    # window=64 < L -> pruning active
+    l1, _ = M.loss_fn(cfg, params, batch)
+    cfg2 = dataclasses.replace(cfg, swa_pruned=False)
+    l2, _ = M.loss_fn(cfg2, params, batch)
+    assert abs(float(l1) - float(l2)) < 1e-5
+
+
+def test_chunked_wkv_equals_serial_in_model():
+    import dataclasses
+    cfg = get_config("rwkv6_1p6b", smoke=True)
+    key = jax.random.PRNGKey(5)
+    params = M.init_params(cfg, key)
+    batch = _batch(cfg, key, length=96)
+    l1, _ = M.loss_fn(cfg, params, batch)
+    l2, _ = M.loss_fn(dataclasses.replace(cfg, chunked_wkv=True), params,
+                      batch)
+    assert abs(float(l1) - float(l2)) < 1e-4
+
+
+def test_grouped_remat_equivalence():
+    """remat_group is an experimental memory lever (refuted for the phi3
+    hillclimb, default 1 — see EXPERIMENTS.md §Perf H3). Forward must be
+    exact; gradients agree up to recompute reordering noise (cosine)."""
+    import dataclasses
+    cfg = dataclasses.replace(get_config("phi3_mini_3p8b", smoke=True),
+                              n_layers=4, remat=True)
+    key = jax.random.PRNGKey(6)
+    params = M.init_params(cfg, key)
+    batch = _batch(cfg, key)
+    cfg2 = dataclasses.replace(cfg, remat_group=2)
+    l1, _ = M.loss_fn(cfg, params, batch)
+    l2, _ = M.loss_fn(cfg2, params, batch)
+    assert abs(float(l1) - float(l2)) < 1e-5
+    g1 = jax.grad(lambda p: M.loss_fn(cfg, p, batch)[0])(params)
+    g2 = jax.grad(lambda p: M.loss_fn(cfg2, p, batch)[0])(params)
+    v1 = jnp.concatenate([x.ravel() for x in jax.tree.leaves(g1)])
+    v2 = jnp.concatenate([x.ravel() for x in jax.tree.leaves(g2)])
+    cos = float(jnp.vdot(v1, v2) /
+                (jnp.linalg.norm(v1) * jnp.linalg.norm(v2)))
+    assert cos > 0.995, cos

@@ -1,0 +1,92 @@
+"""Scheduler layer: throughput model shape, Tiresias/Elastic-Tiresias
+invariants and the JCT improvement claim."""
+import numpy as np
+
+from repro.sched.simulator import ClusterSimulator, Job, ScalingCosts
+from repro.sched.throughput import PROFILES, efficiency, throughput
+from repro.sched.tiresias import ElasticTiresias, Tiresias
+from repro.sched.workload import philly_like, synthetic_16
+
+
+def test_throughput_model_fig1_shape():
+    # throughput grows sublinearly; per-GPU efficiency decays with p
+    for m in ("resnet50", "vgg19"):
+        t = [throughput(m, p) for p in (1, 2, 4, 8, 16)]
+        assert t[1] > t[0]
+        e = [efficiency(m, p) for p in (1, 4, 16, 32)]
+        assert e[0] >= e[-1]
+    # the paper's VGG knee: throughput stops scaling past ~8 GPUs
+    assert throughput("vgg19", 32) < 2.8 * throughput("vgg19", 8)
+
+
+def test_capacity_never_exceeded_and_floor_respected():
+    jobs = philly_like(n_jobs=80, seed=2)
+    pol = ElasticTiresias(N=2, r=0.5)
+    sim = ClusterSimulator(16, jobs, pol, costs=ScalingCosts(mode="edl"))
+
+    orig_apply = sim._apply_alloc
+
+    def checked(alloc):
+        total = sum(alloc.values())
+        assert total <= sim.n_gpus, f"over-allocated: {total}"
+        for jid, p in alloc.items():
+            j = sim.jobs[jid]
+            if p > 0 and j.attained_gpu_s >= pol.quanta[0]:
+                assert p >= max(1, int(np.ceil(pol.r * j.requested_p))) \
+                    or p == j.requested_p
+        orig_apply(alloc)
+
+    sim._apply_alloc = checked
+    stats = sim.run()
+    assert stats["finished"] == 80
+
+
+def test_elastic_tiresias_improves_jct():
+    """EDL's headline scheduling result: elasticity cuts mean JCT
+    substantially under contention (paper: 89.5% on the Philly trace)."""
+    base = ClusterSimulator(48, philly_like(n_jobs=150, seed=1), Tiresias(),
+                            costs=ScalingCosts(mode="stop_resume")).run()
+    elas = ClusterSimulator(48, philly_like(n_jobs=150, seed=1),
+                            ElasticTiresias(),
+                            costs=ScalingCosts(mode="edl")).run()
+    assert base["finished"] == elas["finished"] == 150
+    red = 1 - elas["mean_jct"] / base["mean_jct"]
+    assert red > 0.25, f"JCT reduction only {red:.1%}"
+
+
+def test_synthetic_workload_elastic_beats_static():
+    """Fig-11 analogue: Elastic achieves higher cluster efficiency."""
+    def static_policy(sim):
+        alloc = {}
+        free = sim.n_gpus
+        for j in list(sim.running.values()) + sim.pending:
+            if j.finish_time is None:
+                p = j.requested_p if free >= j.requested_p else 0
+                alloc[j.jid] = j.alloc or p
+                free -= alloc[j.jid]
+        return alloc
+
+    s_static = ClusterSimulator(32, synthetic_16(), static_policy,
+                                costs=ScalingCosts(mode="edl")).run()
+    s_elastic = ClusterSimulator(32, synthetic_16(), ElasticTiresias(N=0),
+                                 costs=ScalingCosts(mode="edl")).run()
+    assert s_elastic["finished"] == s_static["finished"] == 16
+    assert s_elastic["mean_jct"] <= s_static["mean_jct"] * 1.05
+
+
+def test_inelastic_jobs_never_resized():
+    jobs = synthetic_16()
+    for j in jobs:
+        j.inelastic = True
+    seen = []
+
+    pol = ElasticTiresias(N=0)
+
+    def spy(sim):
+        alloc = pol(sim)
+        for jid, p in alloc.items():
+            if p > 0:
+                assert p == sim.jobs[jid].requested_p
+        return alloc
+
+    ClusterSimulator(32, jobs, spy, costs=ScalingCosts(mode="edl")).run()

@@ -1,0 +1,119 @@
+"""Optimizers, checkpointing, sharding rules."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.optim import adam, adamw, sgd
+from repro.sharding import spec_for
+
+
+# ---------------------------------------------------------------- optimizers
+def _rosenbrock_ish(opt, steps=400):
+    params = {"x": jnp.array([2.0]), "y": jnp.array([-1.5])}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum((1 - p["x"]) ** 2 + 5 * (p["y"] - p["x"] ** 2) ** 2)
+
+    for _ in range(steps):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params)
+    return float(loss(params))
+
+
+def test_adam_converges():
+    assert _rosenbrock_ish(adam(3e-2), steps=1200) < 1e-2
+
+
+def test_adamw_decays_weights():
+    opt = adamw(1e-2, weight_decay=0.1)
+    params = {"w": jnp.ones((4,))}
+    state = opt.init(params)
+    g = {"w": jnp.zeros((4,))}
+    for _ in range(50):
+        params, state = opt.update(g, state, params)
+    assert float(params["w"][0]) < 1.0       # pure decay shrinks weights
+
+
+def test_sgd_momentum():
+    assert _rosenbrock_ish(sgd(2e-3, momentum=0.9), steps=800) < 1.0
+
+
+def test_moments_fp32_regardless_of_param_dtype():
+    opt = adam(1e-3)
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    state = opt.init(params)
+    assert state["mu"]["w"].dtype == jnp.float32
+    g = {"w": jnp.ones((4,), jnp.bfloat16)}
+    new_p, state = opt.update(g, state, params)
+    assert new_p["w"].dtype == jnp.bfloat16
+    assert state["nu"]["w"].dtype == jnp.float32
+
+
+# -------------------------------------------------------------- checkpoints
+def test_checkpoint_roundtrip():
+    from repro.configs import get_config
+    from repro.optim import adamw as mk
+    from repro.training.step import init_train_state
+    cfg = get_config("edl-paper", smoke=True)
+    opt = mk(1e-3)
+    state = init_train_state(cfg, opt, jax.random.PRNGKey(0))
+    pipe_state = {"epoch": 1, "seed": 0, "done_samples": 5,
+                  "queue": [1, 2], "returned": [[3, 4]]}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, state, step=7, pipeline_state=pipe_state)
+        restored, meta = load_checkpoint(d, like=jax.device_get(state))
+    assert meta["step"] == 7
+    assert meta["pipeline"]["queue"] == [1, 2]
+    for a, b in zip(jax.tree.leaves(jax.device_get(state)),
+                    jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_shape_mismatch_rejected():
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, {"w": np.ones((2, 2))}, step=0)
+        try:
+            load_checkpoint(d, like={"w": np.ones((3, 3))})
+            assert False
+        except AssertionError:
+            pass
+
+
+# ------------------------------------------------------------- sharding rules
+def test_spec_for_basic_and_divisibility(monkeypatch):
+    import os
+    os.environ.setdefault("XLA_FLAGS", "")
+
+    class FakeMesh:
+        shape = {"data": 4, "model": 2}
+    mesh = FakeMesh()
+    # batch shards over data when divisible
+    assert spec_for(("batch", None), (8, 3), mesh) == P("data")
+    # non-divisible dim falls back to replication
+    assert spec_for(("batch", None), (6, 3), mesh) == P()
+    # heads shard over model
+    assert spec_for(("embed", "heads"), (8, 6), mesh) == P("data", "model")
+    # axis used once only
+    s = spec_for(("batch", "embed"), (8, 8), mesh)
+    assert s == P("data")      # 'embed' wants (pod,data); data already used
+
+
+def test_param_axes_cover_all_leaves():
+    from repro.configs import ARCH_IDS, get_config
+    from repro.models.model import param_logical_axes, param_shape_structs
+    for arch in ARCH_IDS:
+        cfg = get_config(arch, smoke=True)
+        axes = param_logical_axes(cfg)
+        shapes = param_shape_structs(cfg)
+        ax_leaves = jax.tree.leaves(
+            axes, is_leaf=lambda x: isinstance(x, tuple))
+        sh_leaves = jax.tree.leaves(shapes)
+        assert len(ax_leaves) == len(sh_leaves)
+        for a, s in zip(ax_leaves, sh_leaves):
+            assert len(a) == len(s.shape), (arch, a, s.shape)
