@@ -1,0 +1,18 @@
+# Tier-1 verification and common entry points (see ROADMAP.md).
+PY ?= python
+
+.PHONY: test test-fast cluster-demo bench-cluster
+
+# the tier-1 command: full suite, fail fast
+test:
+	$(PY) -m pytest -x -q
+
+# skip the multi-device subprocess integration tests (~seconds, not minutes)
+test-fast:
+	$(PY) -m pytest -x -q -m "not slow"
+
+cluster-demo:
+	PYTHONPATH=src $(PY) examples/multi_tenant_cluster.py
+
+bench-cluster:
+	PYTHONPATH=src $(PY) benchmarks/cluster_bench.py

@@ -1,0 +1,60 @@
+"""Cluster-scheduling benchmark: the SAME three-tenant live workload under
+static / elastic-tiresias / throughput policies on a shared 4-device pool
+(Fig-11 analogue at smoke scale, but on real ElasticTrainers).
+
+Reports mean JCT (scheduling rounds) and wall time per policy; derived
+field records the JCT reduction of the best elastic policy vs static.
+
+  PYTHONPATH=src python benchmarks/cluster_bench.py
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(__file__))
+from common import emit, save  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=4)
+    ap.add_argument("--jobs", default="a=vgg19:3:20@0,b=resnet50:1:25@0,"
+                                      "c=googlenet:1:12@6")
+    args = ap.parse_args()
+
+    os.environ.setdefault(
+        "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.devices}")
+    from repro.cluster import ClusterExecutor, make_policy
+    from repro.launch.cluster import parse_jobs
+
+    results = {}
+    for name in ("static", "elastic-tiresias", "throughput"):
+        specs = parse_jobs(args.jobs, batch=12, seq=64, n_samples=1 << 10,
+                           d_partitions=16)
+        t0 = time.monotonic()
+        ex = ClusterExecutor(specs, make_policy(name))
+        stats = ex.run(max_rounds=300)
+        wall = time.monotonic() - t0
+        jct = stats["mean_jct"]     # None when nothing finished in budget
+        results[name] = {"mean_jct": jct,
+                         "makespan": stats["makespan"],
+                         "finished": stats["finished"],
+                         "max_loaned": stats["max_loaned"],
+                         "events": len(stats["events"]),
+                         "wall_s": round(wall, 2)}
+        emit(f"cluster_{name}", wall * 1e6,
+             f"mean_jct={jct:.1f}_rounds" if jct is not None
+             else "mean_jct=unfinished")
+
+    base = results["static"]["mean_jct"]
+    elastic = [results[n]["mean_jct"]
+               for n in ("elastic-tiresias", "throughput")
+               if results[n]["mean_jct"] is not None]
+    red = 1 - min(elastic) / base if base and elastic else 0.0
+    emit("cluster_elastic_vs_static", 0.0, f"jct_reduction={red:.1%}")
+    save("cluster", {"results": results, "jct_reduction": red})
+
+
+if __name__ == "__main__":
+    main()

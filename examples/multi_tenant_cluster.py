@@ -1,0 +1,22 @@
+"""Multi-tenant elastic cluster demo (paper §6): three tenants share one
+device pool; the scheduling policy retunes their parallelism live —
+scale-in on an over-provisioned job funds scale-out (a transient loan) on a
+better-scaling one, a late arrival reclaims the loan, and every device move
+is a real stop-free ElasticTrainer topology switch, not a simulated tick.
+
+  PYTHONPATH=src python examples/multi_tenant_cluster.py
+  PYTHONPATH=src python examples/multi_tenant_cluster.py \
+      --policy elastic-tiresias --devices 4
+
+Pass --jobs to change the tenant mix (grammar:
+``name=profile:requested_p:total_steps@arrival_round``).
+"""
+import sys
+
+# repro.launch.cluster forces the multi-device host platform BEFORE jax
+# loads, parses the job grammar, runs the executor, and prints the event
+# timeline — this example is the human-facing entry point for it.
+from repro.launch.cluster import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,6 @@
+from repro.cluster.executor import ClusterExecutor, default_trainer_factory
+from repro.cluster.job import ClusterJob, JobSpec
+from repro.cluster.policy import Action, make_policy, plan_actions
+
+__all__ = ["ClusterExecutor", "default_trainer_factory", "ClusterJob",
+           "JobSpec", "Action", "make_policy", "plan_actions"]

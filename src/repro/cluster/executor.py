@@ -1,0 +1,280 @@
+"""Multi-tenant elastic cluster executor — the paper's §6 scenarios on LIVE
+jobs instead of simulated ticks.
+
+Runs N concurrent ``ElasticTrainer`` jobs against ONE shared device pool,
+round-robin at mini-batch granularity (one scheduling *round* = one
+mini-batch per running job). Every ``resched_every`` rounds a pluggable
+policy — the same Tiresias / Elastic-Tiresias / MaxThroughput / Static
+callables that drive the discrete-event simulator — returns a target
+allocation map, which is diffed into real elastic actions:
+
+  shrink  — graceful ``release_devices`` scale-in, stop-free: the job keeps
+            stepping through context prep and the freed devices return to
+            the executor pool when the switch commits at a batch boundary;
+  grow    — ``grant_devices`` scale-out onto free pool devices. A grant
+            beyond the job's requested parallelism is a transient-resource
+            LOAN (§6.2): the pool stays fully utilized and the next
+            rebalance reclaims the loan on demand via graceful scale-in;
+  start   — a pending job is admitted (trainer built) once enough devices
+            are free — typically funded by another job's shrink;
+  migrate — straggler-triggered (§5.2): workers flagged by the job's
+            StragglerDetector are cycled out in one fused switch.
+
+Device conservation — sum of per-job device pools plus the free pool equals
+the cluster size — is asserted after every round; devices move ownership
+only synchronously (grant) or at a commit boundary (release/finish), so the
+invariant is exact even with scale operations in flight.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.cluster.job import ClusterJob, JobSpec
+from repro.cluster.policy import plan_actions
+from repro.core.scaling import Busy, Phase
+
+
+def default_trainer_factory(spec: JobSpec, devices: list):
+    """Build a real ElasticTrainer owning exactly ``devices``."""
+    from repro.configs import get_config
+    from repro.core import ElasticTrainer
+    from repro.optim import adamw
+    cfg = get_config(spec.arch, smoke=True)
+    return ElasticTrainer(
+        cfg, global_batch=spec.global_batch, seq_len=spec.seq_len,
+        init_parallelism=len(devices), optimizer=adamw(spec.lr),
+        n_samples=spec.n_samples, d_partitions=spec.d_partitions,
+        job_handle=spec.name, seed=spec.seed, devices=devices,
+        time_allowance_s=0.1)
+
+
+class ClusterExecutor:
+    def __init__(self, specs: list[JobSpec], policy, *, devices=None,
+                 resched_every: int = 4, trainer_factory=None,
+                 prep_yield_s: float = 0.15, serialize_prep: bool = True):
+        if devices is None:
+            import jax
+            devices = jax.devices()
+        self.devices = list(devices)
+        self.n_gpus = len(self.devices)
+        self.free: list = list(self.devices)
+        self.policy = policy
+        self.resched_every = resched_every
+        self.trainer_factory = trainer_factory or default_trainer_factory
+        self.prep_yield_s = prep_yield_s
+        self.serialize_prep = serialize_prep
+        self.jobs = {jid: ClusterJob(jid, s) for jid, s in enumerate(specs)}
+        self.pending: list[ClusterJob] = []
+        self.running: dict[int, ClusterJob] = {}
+        self.finished: list[ClusterJob] = []
+        self._to_arrive = sorted(self.jobs.values(),
+                                 key=lambda j: (j.arrival, j.jid))
+        self._wants: dict[int, int] = {}        # jid -> target parallelism
+        self.round = 0
+        self.events: list[dict] = []
+        self.preempt_clamps = 0
+
+    # the policy-view clock: scheduling rounds (see sched.base on units)
+    @property
+    def now(self) -> float:
+        return float(self.round)
+
+    # ------------------------------------------------------------- events
+    def _event(self, op: str, job: ClusterJob, from_p: int, to_p: int):
+        self.events.append({
+            "round": self.round, "op": op, "job": job.spec.name,
+            "jid": job.jid, "from_p": from_p, "to_p": to_p,
+            "loaned": max(0, to_p - job.requested_p)})
+
+    def _on_devices_released(self, trainer, freed: list):
+        """ElasticTrainer hand-off hook: a release_devices scale-in (or a
+        loan reclaim) COMMITTED; the devices come home to the pool. The
+        scale_in event is logged here — at ownership transfer — not at
+        request time, so the event order reflects which devices actually
+        funded which grants."""
+        self.free.extend(freed)
+        job = self.jobs.get(getattr(trainer, "_cluster_jid", -1))
+        if job is not None:
+            self._event("scale_in", job, job.alloc + len(freed), job.alloc)
+
+    # ---------------------------------------------------------- admission
+    def _admit_arrivals(self):
+        while self._to_arrive and self._to_arrive[0].arrival <= self.now:
+            job = self._to_arrive.pop(0)
+            # jobs launch at their requested parallelism when it fits;
+            # otherwise they queue and the policy decides (compaction etc.)
+            if len(self.free) >= job.requested_p:
+                self._start(job, job.requested_p)
+            else:
+                self.pending.append(job)
+
+    def _start(self, job: ClusterJob, p: int):
+        devs = [self.free.pop(0) for _ in range(p)]
+        trainer = job.launch(devs, self.trainer_factory)
+        trainer.on_devices_released = self._on_devices_released
+        trainer._cluster_jid = job.jid
+        if job in self.pending:
+            self.pending.remove(job)
+        self.running[job.jid] = job
+        self._wants.pop(job.jid, None)
+        self._event("scale_out", job, 0, p)
+
+    # --------------------------------------------------------- scheduling
+    def _prep_in_flight(self) -> bool:
+        return any(j.trainer.controller.phase is not Phase.IDLE
+                   for j in self.running.values())
+
+    def _reschedule(self):
+        alloc = self.policy(self)
+        for act in plan_actions(self.jobs, alloc, self.n_gpus):
+            job = self.jobs[act.jid]
+            if self.serialize_prep and self._prep_in_flight():
+                # one context-prep at a time cluster-wide: concurrent
+                # background compiles starve each other on small hosts and
+                # none ever reaches its switch step; the skipped action is
+                # re-planned at the next reschedule
+                break
+            if act.kind == "scale_in":
+                cur = job.alloc
+                try:
+                    job.trainer.release_devices(cur - act.target_p)
+                except Busy:
+                    continue        # a switch is in flight; next resched
+                if act.clamped:
+                    self.preempt_clamps += 1
+                self._wants.pop(act.jid, None)
+                # the scale_in event logs in _on_devices_released at commit
+            else:                   # start / scale_out: wait for devices
+                self._wants[act.jid] = act.target_p
+        # drop stale wants for jobs the policy no longer wants to grow
+        for jid in list(self._wants):
+            if jid not in alloc or self.jobs[jid].finish_time is not None:
+                del self._wants[jid]
+
+    def _satisfy_wants(self):
+        """Grant free devices toward wanted growth, FIFO by arrival —
+        this is where one job's scale-in funds another's scale-out."""
+        for jid in sorted(self._wants,
+                          key=lambda i: (self.jobs[i].arrival, i)):
+            job, target = self.jobs[jid], self._wants[jid]
+            if job.trainer is None:
+                if len(self.free) >= target and not (
+                        self.serialize_prep and self._prep_in_flight()):
+                    self._start(job, target)    # foreground compile
+                continue
+            cur = job.alloc
+            if target <= cur:
+                del self._wants[jid]
+                continue
+            take = min(target - cur, len(self.free))
+            # a PARTIAL grant must itself land on a feasible parallelism
+            # (global batch divisibility), not just the final target
+            take = job.feasible_p(cur + take) - cur
+            if take < 1 or job.trainer.controller.phase is not Phase.IDLE:
+                continue
+            if self.serialize_prep and self._prep_in_flight():
+                continue        # grants compile too; one prep at a time
+            devs = [self.free.pop(0) for _ in range(take)]
+            try:
+                job.trainer.grant_devices(devs)
+            except (Busy, ValueError):
+                self.free = devs + self.free
+                continue
+            self._event("scale_out", job, cur, cur + take)
+            if cur + take >= target:
+                del self._wants[jid]
+
+    # ------------------------------------------------------------ stepping
+    def _step_job(self, job: ClusterJob):
+        trainer = job.trainer
+        m = trainer.step()
+        if m is None:               # epoch boundary; commit if scheduled
+            if trainer.controller.phase is Phase.SCHEDULED:
+                trainer._commit_switch()
+            return
+        job.on_step(m, self.now)
+        flagged = [w for w in getattr(trainer, "_flagged_stragglers", [])
+                   if w in trainer.worker_ids]
+        if flagged and trainer.controller.phase is Phase.IDLE \
+                and trainer.p > len(flagged):
+            try:
+                trainer.migrate(victims=flagged, block=False)
+            except (Busy, ValueError):
+                pass
+            else:
+                job.n_migrations += len(flagged)
+                self._event("migrate", job, trainer.p, trainer.p)
+        if job.steps_done >= job.spec.total_steps:
+            self._finish(job)
+
+    def _finish(self, job: ClusterJob):
+        job.finish_time = self.now
+        # an in-flight context prep still reads trainer.devices from its
+        # thread; let it land before the pool takes the devices back
+        t = getattr(job.trainer, "_prep_thread", None)
+        if t is not None and t.is_alive():
+            t.join(timeout=120)
+        p = job.alloc
+        self.free.extend(job.trainer.devices)
+        job.trainer.devices = []
+        del self.running[job.jid]
+        self._wants.pop(job.jid, None)
+        self.finished.append(job)
+        self._event("finish", job, p, 0)
+
+    def _assert_conserved(self):
+        owned = sum(j.alloc for j in self.jobs.values())
+        assert owned + len(self.free) == self.n_gpus, \
+            (f"device leak: {owned} owned + {len(self.free)} free "
+             f"!= {self.n_gpus}")
+
+    # -------------------------------------------------------------- driver
+    def run(self, *, max_rounds: int = 10_000) -> dict:
+        while (self.running or self.pending or self._to_arrive) \
+                and self.round < max_rounds:
+            self._admit_arrivals()
+            if self.round and self.round % self.resched_every == 0:
+                self._reschedule()
+            self._satisfy_wants()
+            for job in list(self.running.values()):
+                self._step_job(job)
+            self._assert_conserved()
+            # cooperative yield: background context-prep threads share the
+            # host's cores with training; on small hosts back-to-back steps
+            # can starve an in-flight compile indefinitely
+            if self.prep_yield_s and any(
+                    j.trainer.controller.phase is Phase.PREPARING
+                    for j in self.running.values()):
+                time.sleep(self.prep_yield_s)
+            self.round += 1
+        self._drain_prep_threads()
+        return self.stats()
+
+    def _drain_prep_threads(self):
+        """Join any context-prep still compiling in the background: a
+        daemon thread inside XLA compile at interpreter shutdown aborts the
+        whole process (libc++ ``terminate``)."""
+        for job in self.jobs.values():
+            t = getattr(job.trainer, "_prep_thread", None)
+            if t is not None and t.is_alive():
+                t.join(timeout=120)
+
+    # ------------------------------------------------------------- results
+    def stats(self) -> dict:
+        jcts = [j.finish_time - j.arrival for j in self.finished]
+        out = {
+            "policy": type(self.policy).__name__,
+            "n_gpus": self.n_gpus,
+            "rounds": self.round,
+            "finished": len(self.finished),
+            "unfinished": len(self.jobs) - len(self.finished),
+            "mean_jct": (sum(jcts) / len(jcts)) if jcts else None,
+            "makespan": max((j.finish_time for j in self.finished),
+                            default=None),
+            "max_loaned": max((e["loaned"] for e in self.events), default=0),
+            "preempt_clamps": self.preempt_clamps,
+            "conserved": True,      # run() asserts it every round
+            "jobs": [self.jobs[jid].summary() for jid in sorted(self.jobs)],
+            "events": self.events,
+        }
+        return out

@@ -1,0 +1,119 @@
+"""Cluster-level job objects: the executor's unit of scheduling.
+
+``JobSpec`` is what a tenant submits; ``ClusterJob`` wraps the spec plus the
+live ``ElasticTrainer`` (created lazily when the job is first admitted) and
+exposes the scheduling-view attributes (repro.sched.base) so the same policy
+objects that drive the discrete-event simulator drive live jobs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class JobSpec:
+    """One tenant's elastic training job.
+
+    ``profile`` names an analytic scaling profile in
+    repro.sched.throughput.PROFILES — it is what the scheduling policies
+    reason about (marginal gains, efficiency floors); the actual training
+    workload is the (transformer) ``arch`` config.
+    """
+    name: str
+    requested_p: int
+    total_steps: int
+    profile: str = "resnet50"
+    arch: str = "edl-paper"
+    global_batch: int = 12
+    seq_len: int = 64
+    arrival: float = 0.0        # executor-clock units (scheduling rounds)
+    inelastic: bool = False
+    lr: float = 1e-3
+    n_samples: int = 1 << 10
+    d_partitions: int = 16
+    seed: int = 0
+
+
+class ClusterJob:
+    """Executor-side state of one job. Satisfies the policy view protocol
+    (jid/model/requested_p/arrival/inelastic/attained_gpu_s/alloc/
+    start_time/finish_time)."""
+
+    def __init__(self, jid: int, spec: JobSpec):
+        self.jid = jid
+        self.spec = spec
+        self.trainer = None
+        self.steps_done = 0
+        self.attained_gpu_s = 0.0       # Tiresias service metric
+        self.start_time: float | None = None
+        self.finish_time: float | None = None
+        self.n_migrations = 0
+
+    # ------------------------------------------------- policy view protocol
+    @property
+    def model(self) -> str:
+        return self.spec.profile
+
+    @property
+    def requested_p(self) -> int:
+        return self.spec.requested_p
+
+    @property
+    def arrival(self) -> float:
+        return self.spec.arrival
+
+    @property
+    def inelastic(self) -> bool:
+        return self.spec.inelastic
+
+    @property
+    def alloc(self) -> int:
+        """Devices this job currently OWNS (its whole pool — during an
+        in-flight release they still count here until the switch commits,
+        which is what keeps cluster-wide conservation exact)."""
+        return len(self.trainer.devices) if self.trainer is not None else 0
+
+    @property
+    def remaining_steps(self) -> int:
+        return max(0, self.spec.total_steps - self.steps_done)
+
+    # ------------------------------------------------------------ lifecycle
+    def launch(self, devices: list, trainer_factory):
+        assert self.trainer is None, f"{self.spec.name} already launched"
+        self.trainer = trainer_factory(self.spec, list(devices))
+        return self.trainer
+
+    def feasible_p(self, target: int) -> int:
+        """Largest parallelism <= target the job can actually run at
+        (global batch must divide evenly; live jobs cannot stop at 0 —
+        checkpoint-based full preemption is a ROADMAP follow-on)."""
+        if target < 1:
+            return 0
+        q = target
+        while self.spec.global_batch % q:
+            q -= 1
+        return q
+
+    def on_step(self, metrics: dict, now: float):
+        if self.start_time is None:
+            self.start_time = now
+        self.steps_done += 1
+        self.attained_gpu_s += self.alloc * metrics.get("step_time", 0.0)
+
+    def summary(self) -> dict:
+        return {
+            "name": self.spec.name, "jid": self.jid,
+            "profile": self.spec.profile,
+            "requested_p": self.spec.requested_p,
+            "steps_done": self.steps_done,
+            "attained_gpu_s": round(self.attained_gpu_s, 3),
+            "arrival": self.arrival, "start": self.start_time,
+            "finish": self.finish_time,
+            "jct": (None if self.finish_time is None
+                    else self.finish_time - self.arrival),
+            "final_loss": (self.trainer.metrics_log[-1]["loss"]
+                           if self.trainer is not None
+                           and getattr(self.trainer, "metrics_log", None)
+                           else None),
+            "migrations": self.n_migrations,
+        }

@@ -1,0 +1,76 @@
+"""Pluggable scheduling for the live executor.
+
+A policy is the same callable(view) -> {jid: n_gpus} that drives the
+discrete-event simulator (repro.sched.base). This module supplies
+
+  * ``make_policy(name, **kw)`` — registry of the paper's policies with
+    defaults tuned for live smoke-scale jobs (quanta in attained GPU-seconds
+    are tiny because a smoke mini-batch is ~0.1 s);
+  * ``plan_actions(jobs, alloc, n_gpus)`` — the diff from a target
+    allocation map to concrete elastic actions against live jobs. Shrinks
+    sort first so their freed devices fund the grows/starts.
+
+Full preemption of a RUNNING job (target 0) is clamped to one slice: a live
+ElasticTrainer cannot stop without checkpoint-based preemption (ROADMAP
+follow-on); the clamp is recorded on the action for observability.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.sched.base import StaticPolicy
+from repro.sched.throughput import MaxThroughput
+from repro.sched.tiresias import Tiresias
+
+
+@dataclasses.dataclass(frozen=True)
+class Action:
+    kind: str           # "start" | "scale_out" | "scale_in"
+    jid: int
+    target_p: int       # desired parallelism after the action
+    clamped: bool = False   # true when a 0-alloc preemption was clamped
+
+
+def plan_actions(jobs: dict[int, object], alloc: dict[int, int],
+                 n_gpus: int) -> list[Action]:
+    """Diff the policy's target allocation against live job state."""
+    shrinks, grows = [], []
+    for jid, target in alloc.items():
+        job = jobs.get(jid)
+        if job is None or job.finish_time is not None:
+            continue
+        cur = job.alloc
+        target = job.feasible_p(min(target, n_gpus))
+        if job.trainer is None:
+            if target > 0:
+                grows.append(Action("start", jid, target))
+            continue
+        clamped = target == 0
+        if clamped:
+            target = 1          # live preemption floor (see module docstring)
+        if target < cur:
+            shrinks.append(Action("scale_in", jid, target, clamped))
+        elif target > cur:
+            grows.append(Action("scale_out", jid, target))
+    return shrinks + grows
+
+
+_REGISTRY = {
+    # quanta are attained GPU-seconds: smoke-scale mini-batches are ~50 ms,
+    # so the live defaults are far below the simulator's (500, 10k)
+    "tiresias": lambda **kw: Tiresias(**{
+        "quanta": (0.5, 5.0), "starvation_s": 1_000.0, **kw}),
+    "elastic-tiresias": lambda **kw: Tiresias(**{
+        "elastic": True, "N": 0, "quanta": (0.5, 5.0),
+        "starvation_s": 1_000.0, **kw}),
+    "throughput": lambda **kw: MaxThroughput(**kw),
+    "static": lambda **kw: StaticPolicy(**kw),
+}
+
+
+def make_policy(name: str, **kw):
+    try:
+        return _REGISTRY[name](**kw)
+    except KeyError:
+        raise ValueError(f"unknown policy {name!r}; "
+                         f"one of {sorted(_REGISTRY)}") from None

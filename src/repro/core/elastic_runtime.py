@@ -39,6 +39,7 @@ from repro.training.step import batch_sharding, init_train_state, \
     make_train_step, state_sharding
 
 TIME_ALLOWANCE_S = 0.5      # paper's T_a
+EXEC_CACHE_MAX = 8          # compiled topologies retained per job (LRU)
 
 
 @dataclasses.dataclass
@@ -59,7 +60,8 @@ class ElasticTrainer:
                  n_samples: int = 1 << 14, d_partitions: int = 64,
                  job_handle: str = "job0",
                  store: CoordinationStore | None = None, seed: int = 0,
-                 devices=None, use_aot: bool = True):
+                 devices=None, use_aot: bool = True,
+                 time_allowance_s: float = TIME_ALLOWANCE_S):
         self.cfg = cfg
         self.global_batch = global_batch
         self.seq_len = seq_len
@@ -69,6 +71,9 @@ class ElasticTrainer:
         self.job_handle = job_handle
         self.store = store or CoordinationStore()
         self.use_aot = use_aot
+        # paper default 500 ms; cluster executor shrinks it for smoke-scale
+        # jobs whose whole lifetime is a few seconds
+        self.time_allowance_s = time_allowance_s
 
         # data substrate (leader-side pipeline + per-slice iterators)
         self.dataset = dataset or SyntheticTokenDataset(
@@ -84,6 +89,7 @@ class ElasticTrainer:
         self.injected_delay: dict[str, float] = {}
 
         # bring up the initial topology (this is job launch, not scaling)
+        self._exec_cache: dict[tuple, ExecHandle] = {}
         self.p = init_parallelism
         self._worker_seq = 0
         self.worker_ids: list[str] = []
@@ -107,6 +113,9 @@ class ElasticTrainer:
         self.metrics_log: list[dict] = []
         self.throughput_log: list[tuple[float, int, float]] = []
         self._prep_thread: threading.Thread | None = None
+        # cluster-executor hand-off: called with (trainer, freed_devices)
+        # when a release_devices() scale-in commits
+        self.on_devices_released: Callable | None = None
 
     # ------------------------------------------------------------- workers
     def _add_worker(self) -> str:
@@ -131,7 +140,23 @@ class ElasticTrainer:
     # ---------------------------------------------------------- executables
     def _build_exec(self, p: int) -> ExecHandle:
         """Execution-context preparation for parallelism p: mesh + shardings
-        + AOT-compiled step. This is the cost stop-free scaling hides."""
+        + AOT-compiled step. This is the cost stop-free scaling hides.
+
+        Handles are cached per (p, exact ordered devices) — order matters:
+        the mesh layout and shardings are position-dependent, so the same
+        device set in a different order is a different executable.
+        Re-scaling to a topology this job already ran on (compact/expand
+        cycles under a cluster policy, migrate at constant p) skips the
+        recompile entirely; the cache is LRU-bounded so a long-lived job
+        cycling through loaner combinations cannot pin unbounded compiled
+        executables. The stop-resume baseline clears the cache — a
+        restarted process pays context preparation from zero."""
+        key = (p, tuple(d.id for d in
+                        self.devices[: p * self.model_parallel]))
+        cached = self._exec_cache.get(key)
+        if cached is not None:
+            self._exec_cache[key] = self._exec_cache.pop(key)   # LRU touch
+            return cached
         mesh = make_mesh(p, self.model_parallel, devices=np.array(
             self.devices[: p * self.model_parallel]))
         st_sh = state_sharding(self.cfg, mesh, self.optimizer)
@@ -152,7 +177,11 @@ class ElasticTrainer:
         else:
             step_fn = jax.jit(fn, in_shardings=(st_sh, b_sh),
                               out_shardings=(st_sh, None))
-        return ExecHandle(p, mesh, step_fn, st_sh, b_sh)
+        handle = ExecHandle(p, mesh, step_fn, st_sh, b_sh)
+        self._exec_cache[key] = handle
+        while len(self._exec_cache) > EXEC_CACHE_MAX:
+            self._exec_cache.pop(next(iter(self._exec_cache)))
+        return handle
 
     # -------------------------------------------------------------- stepping
     def _assemble_batch(self) -> dict | None:
@@ -230,27 +259,37 @@ class ElasticTrainer:
 
     def scale_out(self, n_new: int = 1, *, block: bool = False
                   ) -> ScalingRecord | None:
-        """sclae_out(): add n_new data-parallel slices, stop-free."""
+        """scale_out(): add n_new data-parallel slices, stop-free. Raises
+        Busy (the paper's RETRY) if another scaling op is in flight."""
+        if self.controller.phase is not Phase.IDLE:
+            raise Busy("scaling in flight; retry later")
         return self._request("scale_out", self.p + n_new, block=block)
 
     def scale_in(self, n_remove: int = 1, *, victims: list[str] | None = None,
-                 block: bool = False) -> ScalingRecord | None:
-        """sclae_in(): remove slices via graceful exit. Raises Busy (the
+                 block: bool = False, release: bool = False
+                 ) -> ScalingRecord | None:
+        """scale_in(): remove slices via graceful exit. Raises Busy (the
         paper's RETRY) if another scaling op is in flight."""
         if self.controller.phase is not Phase.IDLE:
             raise Busy("scaling in flight; retry later")
         if self.p - n_remove < 1:
             raise ValueError(f"cannot scale below 1 (p={self.p})")
         return self._request("scale_in", self.p - n_remove, block=block,
-                             victims=victims)
+                             victims=victims, release=release)
 
-    def migrate(self, n: int = 1, *, block: bool = True):
-        """Fused scale-in + scale-out: one topology switch (§5.2)."""
+    def migrate(self, n: int = 1, *, victims: list[str] | None = None,
+                block: bool = True):
+        """Fused scale-in + scale-out: one topology switch (§5.2). Pass
+        ``victims`` to cycle specific workers (straggler mitigation)."""
+        if self.controller.phase is not Phase.IDLE:
+            raise Busy("scaling in flight; retry later")
+        victims = victims if victims is not None else self.worker_ids[-n:]
         return self._request("migrate", self.p, block=block,
-                             victims=self.worker_ids[-n:], n_join=n)
+                             victims=victims, n_join=len(victims))
 
     def _request(self, op: str, target_p: int, *, block: bool,
-                 victims=None, n_join: int | None = None):
+                 victims=None, n_join: int | None = None,
+                 release: bool = False):
         avail = len(self.devices) // self.model_parallel
         if target_p > avail:
             raise ValueError(f"need {target_p} slices, have {avail}")
@@ -260,11 +299,12 @@ class ElasticTrainer:
         plan = self.controller.admit(op, self.p, target_p)  # raises Busy
         plan.exiting = tuple(victims or ())
         plan.joining = ("new",) * (n_join or max(0, target_p - self.p))
+        plan.release_devices = release
         steps_before = self.step_idx
 
         def prepare():
             handle = self._build_exec(target_p)
-            k = max(1, math.ceil(TIME_ALLOWANCE_S /
+            k = max(1, math.ceil(self.time_allowance_s /
                                  max(self.step_time_ema or 0.01, 1e-4)))
             plan.record.steps_during_prep = self.step_idx - steps_before
             self.controller.prepared(self.step_idx + k, handle)
@@ -304,8 +344,47 @@ class ElasticTrainer:
         jax.block_until_ready(jax.tree.leaves(self.state)[0])
         self.exec = handle
         self.p = handle.p
+        freed = []
+        if plan.release_devices:
+            # hand everything beyond the new topology back to the caller
+            # (cluster executor reclaim): the job stops owning those devices
+            in_use = handle.p * self.model_parallel
+            freed, self.devices = self.devices[in_use:], self.devices[:in_use]
         rec = self.controller.complete()
+        if freed and self.on_devices_released is not None:
+            self.on_devices_released(self, freed)
         return rec
+
+    # ------------------------------------------------ device pool hand-off
+    def grant_devices(self, new_devices, *, block: bool = False
+                      ) -> ScalingRecord | None:
+        """Non-blocking hand-off path: a scheduler grants this job extra
+        devices (e.g. transient resources loaned from an idle pool) and the
+        job scales out onto them, stop-free. The devices join the job's pool
+        immediately; the topology switch commits at a mini-batch boundary."""
+        if self.controller.phase is not Phase.IDLE:
+            raise Busy("scaling in flight; retry later")
+        n_new = len(new_devices) // self.model_parallel
+        if n_new < 1:
+            raise ValueError(f"need >= {self.model_parallel} devices, "
+                             f"got {len(new_devices)}")
+        self.devices = self.devices + list(new_devices)
+        try:
+            return self._request("scale_out", self.p + n_new, block=block)
+        except Exception:
+            self.devices = self.devices[:len(self.devices)
+                                        - len(new_devices)]
+            raise
+
+    def release_devices(self, n_slices: int = 1, *,
+                        victims: list[str] | None = None,
+                        block: bool = False) -> ScalingRecord | None:
+        """Graceful scale-in that RETURNS the freed devices: once the switch
+        commits, the devices leave ``self.devices`` and are handed to the
+        ``on_devices_released`` hook (the reclaim side of a transient loan).
+        Stop-free like any scale-in; raises Busy under a conflicting op."""
+        return self.scale_in(n_slices, victims=victims, block=block,
+                             release=True)
 
     # ------------------------------------------------------------- helpers
     def run(self, n_steps: int, *, on_step=None):

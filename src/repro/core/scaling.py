@@ -72,6 +72,8 @@ class SwitchPlan:
     exec_handle: object = None  # (mesh, compiled fns, shardings)
     exiting: tuple = ()         # worker ids leaving (scale-in / migrate)
     joining: tuple = ()
+    release_devices: bool = False   # hand freed devices back at commit
+                                    # (cluster executor's reclaim path)
 
 
 class ScalingController:

@@ -36,6 +36,7 @@ def stop_resume_rescale(trainer, target_p: int,
     #    process pays context preparation from zero.
     trainer.state = None
     trainer.exec = None
+    trainer._exec_cache.clear()
     jax.clear_caches()
 
     # 3. rebuild execution context at the new parallelism (foreground!)

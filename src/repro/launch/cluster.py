@@ -1,0 +1,107 @@
+import argparse
+import os
+import sys
+
+
+def _preparse_devices() -> int:
+    ap = argparse.ArgumentParser(add_help=False)
+    ap.add_argument("--devices", type=int,
+                    default=int(os.environ.get("EDL_DEVICES", "4")))
+    ns, _ = ap.parse_known_args()
+    return ns.devices
+
+
+_N_DEV = _preparse_devices()
+if "--xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               f" --xla_force_host_platform_device_count="
+                               f"{_N_DEV}")
+
+"""Multi-tenant cluster driver (end-to-end example + integration target).
+
+Runs N concurrent elastic jobs on a shared device pool under a pluggable
+scheduling policy, reporting per-job JCTs, all scaling events, and the
+device-conservation verdict as JSON.
+
+  PYTHONPATH=src python -m repro.launch.cluster --devices 4 \
+      --policy throughput --jobs "a=vgg19:3:25@0,b=resnet50:1:30@0"
+
+Job grammar: ``name=profile:requested_p:total_steps@arrival`` where
+``profile`` names an analytic scaling profile (sched.throughput.PROFILES)
+and ``arrival`` is in scheduling rounds.
+"""
+import json
+import time
+
+
+def parse_jobs(text: str, *, batch: int, seq: int, n_samples: int,
+               d_partitions: int):
+    from repro.cluster.job import JobSpec
+    specs = []
+    for i, item in enumerate(text.split(",")):
+        name, rest = item.split("=")
+        body, _, arrival = rest.partition("@")
+        profile, req_p, steps = body.split(":")
+        specs.append(JobSpec(
+            name=name.strip(), profile=profile, requested_p=int(req_p),
+            total_steps=int(steps), arrival=float(arrival or 0.0),
+            global_batch=batch, seq_len=seq, n_samples=n_samples,
+            d_partitions=d_partitions, seed=i))
+    return specs
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", default="a=vgg19:3:25@0,b=resnet50:1:30@0,"
+                                      "c=googlenet:1:15@6")
+    ap.add_argument("--policy", default="throughput",
+                    choices=["tiresias", "elastic-tiresias", "throughput",
+                             "static"])
+    ap.add_argument("--devices", type=int, default=_N_DEV)
+    ap.add_argument("--batch", type=int, default=12)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--n-samples", type=int, default=1 << 10)
+    ap.add_argument("--d-partitions", type=int, default=16)
+    ap.add_argument("--resched-every", type=int, default=3)
+    ap.add_argument("--max-rounds", type=int, default=500)
+    ap.add_argument("--json", action="store_true", help="machine output")
+    args = ap.parse_args(argv)
+
+    from repro.cluster import ClusterExecutor, make_policy
+
+    specs = parse_jobs(args.jobs, batch=args.batch, seq=args.seq,
+                       n_samples=args.n_samples,
+                       d_partitions=args.d_partitions)
+    policy = make_policy(args.policy)
+    t0 = time.monotonic()
+    ex = ClusterExecutor(specs, policy, resched_every=args.resched_every)
+    stats = ex.run(max_rounds=args.max_rounds)
+    stats["wall_s"] = round(time.monotonic() - t0, 2)
+
+    if args.json:
+        print(json.dumps(stats))
+        return 0
+    print(f"policy={args.policy} devices={ex.n_gpus} "
+          f"rounds={stats['rounds']} wall={stats['wall_s']}s")
+    print(f"{'job':>8s} {'profile':>10s} {'req_p':>5s} {'steps':>5s} "
+          f"{'jct':>7s} {'loss':>8s}")
+    for j in stats["jobs"]:
+        jct = f"{j['jct']:.0f}" if j["jct"] is not None else "-"
+        loss = (f"{j['final_loss']:.3f}" if j["final_loss"] is not None
+                else "-")
+        print(f"{j['name']:>8s} {j['profile']:>10s} "
+              f"{j['requested_p']:>5d} {j['steps_done']:>5d} "
+              f"{jct:>7s} {loss:>8s}")
+    print("events:")
+    for e in stats["events"]:
+        loan = f" (loan {e['loaned']})" if e["loaned"] else ""
+        print(f"  round {e['round']:3d}  {e['op']:>9s}  {e['job']:>8s}  "
+              f"p {e['from_p']} -> {e['to_p']}{loan}")
+    print(f"device conservation: {'OK' if stats['conserved'] else 'LEAK'}; "
+          f"max transient loan: {stats['max_loaned']} device(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

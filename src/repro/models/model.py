@@ -60,6 +60,28 @@ def init_params(cfg, key) -> dict:
 
 
 # ------------------------------------------------------------------ forward
+@jax.custom_vjp
+def _barrier(x):
+    """Differentiable ``optimization_barrier``: identity with a barrier on
+    the forward value AND on the backward cotangent. ``lax.optimization_barrier``
+    has no differentiation rule, so using it raw under ``value_and_grad``
+    raises NotImplementedError; the custom_vjp keeps the anti-hoisting effect
+    in both passes (the backward barrier stops XLA from hoisting the
+    rematerialized residual converts out of the backward scan too)."""
+    return jax.lax.optimization_barrier(x)
+
+
+def _barrier_fwd(x):
+    return jax.lax.optimization_barrier(x), None
+
+
+def _barrier_bwd(_, ct):
+    return (jax.lax.optimization_barrier(ct),)
+
+
+_barrier.defvjp(_barrier_fwd, _barrier_bwd)
+
+
 def _stack_forward(cfg, params, x, *, positions, cache=None, use_pallas=False,
                    mode="train"):
     """Scan the block stack. Returns (x, new_cache_layers, aux_mean)."""
@@ -71,7 +93,7 @@ def _stack_forward(cfg, params, x, *, positions, cache=None, use_pallas=False,
         # rematerialized layer input across the scan boundary, which would
         # materialize an fp32 copy of the whole [n_layers, B, L, D] residual
         # stack (observed: +24 GiB/device on phi3 train_4k).
-        x = jax.lax.optimization_barrier(x)
+        x = _barrier(x)
         p_slots, c_slots = xs
         new_c = {}
         aux_total = jnp.zeros((), jnp.float32)

@@ -1,6 +1,9 @@
-from repro.sched.throughput import ModelProfile, PROFILES, throughput
+from repro.sched.base import StaticPolicy, alive_jobs
+from repro.sched.throughput import MaxThroughput, ModelProfile, PROFILES, \
+    throughput
 from repro.sched.simulator import ClusterSimulator, Job
 from repro.sched.tiresias import ElasticTiresias, Tiresias
 
-__all__ = ["ModelProfile", "PROFILES", "throughput", "ClusterSimulator",
-           "Job", "Tiresias", "ElasticTiresias"]
+__all__ = ["StaticPolicy", "alive_jobs", "MaxThroughput", "ModelProfile",
+           "PROFILES", "throughput", "ClusterSimulator", "Job", "Tiresias",
+           "ElasticTiresias"]

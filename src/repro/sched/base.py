@@ -1,0 +1,50 @@
+"""The ONE scheduling interface shared by the discrete-event simulator and
+the live cluster executor (repro.cluster.executor).
+
+A *policy* is a callable ``policy(view) -> {jid: n_gpus}`` returning the
+target allocation for every alive job. The ``view`` is anything exposing:
+
+  view.n_gpus   — cluster size
+  view.now      — monotonically increasing clock (seconds for the simulator,
+                  scheduling rounds for the live executor — units only need
+                  to be consistent with the policy's time parameters)
+  view.running  — dict jid -> job (currently allocated jobs)
+  view.pending  — list of jobs waiting for GPUs
+
+and each job exposing: ``jid, model, requested_p, arrival, inelastic,
+attained_gpu_s, alloc, start_time, finish_time``. ``model`` names a profile
+in repro.sched.throughput.PROFILES — the analytic t(p) model the policies
+reason with (the paper's scheduler does the same; live measured throughput
+feeds back through profiling as a follow-on).
+
+Both ``repro.sched.simulator.Job`` and ``repro.cluster.job.ClusterJob``
+satisfy this, so Tiresias / Elastic-Tiresias / MaxThroughput / StaticPolicy
+drive simulated ticks and real ElasticTrainers unchanged.
+"""
+from __future__ import annotations
+
+
+def alive_jobs(view) -> list:
+    """All jobs still needing service, running first then pending."""
+    return [j for j in list(view.running.values()) + list(view.pending)
+            if j.finish_time is None]
+
+
+class StaticPolicy:
+    """Non-elastic baseline: FIFO admission at exactly ``requested_p``;
+    running jobs are never resized (EDL §4.3's static-allocation strawman
+    at the cluster level)."""
+
+    def __call__(self, view) -> dict[int, int]:
+        alloc: dict[int, int] = {}
+        free = view.n_gpus
+        for j in sorted(alive_jobs(view), key=lambda j: j.arrival):
+            if j.alloc > 0:                 # keep whatever it has
+                alloc[j.jid] = j.alloc
+                free -= j.alloc
+        for j in sorted(alive_jobs(view), key=lambda j: j.arrival):
+            if j.alloc == 0:
+                take = j.requested_p if free >= j.requested_p else 0
+                alloc[j.jid] = take
+                free -= take
+        return alloc

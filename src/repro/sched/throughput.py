@@ -64,3 +64,50 @@ def best_per_gpu(name: str, max_p: int = 64) -> float:
 def efficiency(name: str, p: int) -> float:
     """The paper's GPU efficiency: t(p) / t(p*) of per-GPU throughput."""
     return (throughput(name, p) / p) / best_per_gpu(name)
+
+
+class MaxThroughput:
+    """Throughput-maximizing allocator (water-filling over marginal gains).
+
+    Admission floor first — alive jobs in arrival order get 1 GPU each
+    (inelastic jobs: exactly ``requested_p`` or nothing) — then every
+    remaining GPU goes to the elastic job with the largest marginal
+    throughput gain, while that gain exceeds ``min_gain`` samples/s.
+
+    Grants above a job's requested parallelism are transient-resource
+    loans: the next rebalance reclaims them automatically as soon as a
+    newly arrived job's floor (or a better marginal use) needs the GPUs.
+
+    Works on the simulator and the live executor alike (sched.base view
+    interface).
+    """
+
+    def __init__(self, *, min_gain: float = 0.0, max_per_job: int | None = None):
+        self.min_gain = min_gain
+        self.max_per_job = max_per_job
+
+    def __call__(self, view) -> dict[int, int]:
+        from repro.sched.base import alive_jobs
+        jobs = sorted(alive_jobs(view), key=lambda j: (j.arrival, j.jid))
+        alloc: dict[int, int] = {}
+        free = view.n_gpus
+        for j in jobs:
+            need = j.requested_p if j.inelastic else 1
+            take = need if free >= need else 0
+            alloc[j.jid] = take
+            free -= take
+        cap = self.max_per_job or view.n_gpus
+        while free > 0:
+            best, best_gain = None, self.min_gain
+            for j in jobs:
+                p = alloc[j.jid]
+                if p == 0 or p >= cap or j.inelastic:
+                    continue
+                gain = throughput(j.model, p + 1) - throughput(j.model, p)
+                if gain > best_gain:
+                    best, best_gain = j, gain
+            if best is None:
+                break
+            alloc[best.jid] += 1
+            free -= 1
+        return alloc

@@ -10,11 +10,16 @@ Elastic-Tiresias adds two rules:
      the queue, choosing removals that maximize the GPU-efficiency gain.
   R2 Expansion — when GPUs idle and nothing waits, greedily give +1 GPU to
      the job with the largest marginal throughput gain, while positive.
+
+Policies take a *view* (repro.sched.base): the discrete-event simulator and
+the live multi-tenant executor expose the same interface, so the identical
+policy object drives simulated ticks or real ElasticTrainer scaling calls.
 """
 from __future__ import annotations
 
 import math
 
+from repro.sched.base import alive_jobs
 from repro.sched.throughput import efficiency, throughput
 
 
@@ -34,18 +39,17 @@ class Tiresias:
                 return g
         return len(self.quanta)
 
-    def _priority_key(self, sim, job):
+    def _priority_key(self, view, job):
         starved = (job.start_time is None and
-                   sim.now - job.arrival > self.starvation_s)
+                   view.now - job.arrival > self.starvation_s)
         return (0 if starved else self.group_of(job), job.arrival)
 
     # ------------------------------------------------------------ schedule
-    def __call__(self, sim) -> dict[int, int]:
-        jobs = [j for j in list(sim.running.values()) + sim.pending
-                if j.finish_time is None]
-        jobs.sort(key=lambda j: self._priority_key(sim, j))
+    def __call__(self, view) -> dict[int, int]:
+        jobs = [j for j in alive_jobs(view)]
+        jobs.sort(key=lambda j: self._priority_key(view, j))
         alloc: dict[int, int] = {}
-        free = sim.n_gpus
+        free = view.n_gpus
         waiting = []
         for j in jobs:
             if free >= j.requested_p:
@@ -56,12 +60,12 @@ class Tiresias:
                 waiting.append(j)
 
         if self.elastic:
-            alloc, free = self._compact(sim, jobs, alloc, free, waiting)
-            alloc = self._expand(sim, jobs, alloc, free, waiting)
+            alloc, free = self._compact(jobs, alloc, free, waiting)
+            alloc = self._expand(jobs, alloc, free, waiting)
         return alloc
 
     # ---------------------------------------------------------------- R1
-    def _compact(self, sim, jobs, alloc, free, waiting):
+    def _compact(self, jobs, alloc, free, waiting):
         if len(waiting) <= self.N:
             return alloc, free
         for pending in list(waiting):
@@ -90,7 +94,7 @@ class Tiresias:
         return alloc, free
 
     # ---------------------------------------------------------------- R2
-    def _expand(self, sim, jobs, alloc, free, waiting):
+    def _expand(self, jobs, alloc, free, waiting):
         if waiting:
             return alloc
         while free > 0:

@@ -1,0 +1,274 @@
+"""Multi-tenant cluster executor: policy-driven device transfers between
+LIVE jobs (one job's scale-in funding another's scale-out), transient
+loans, straggler-triggered migration, and device conservation.
+
+Fast tests drive the full executor loop with a FakeTrainer implementing the
+ElasticTrainer hand-off interface (no jax, deterministic). The slow tests
+run the real driver (repro.launch.cluster) in a subprocess on a forced
+multi-device host platform, under BOTH Tiresias and throughput policies.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.cluster.executor import ClusterExecutor
+from repro.cluster.job import ClusterJob, JobSpec
+from repro.cluster.policy import make_policy, plan_actions
+from repro.core.scaling import Phase
+from repro.sched.throughput import MaxThroughput, step_time
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+# --------------------------------------------------------------- fake layer
+class _Controller:
+    phase = Phase.IDLE
+
+
+class FakeTrainer:
+    """ElasticTrainer's executor-facing surface with instant (blocking)
+    switches and the analytic step-time of the job's profile."""
+
+    def __init__(self, spec, devices):
+        self.spec = spec
+        self.devices = list(devices)
+        self.controller = _Controller()
+        self.injected_delay = {}
+        self._flagged_stragglers = []
+        self.metrics_log = []
+        self.on_devices_released = None
+        self.step_count = 0
+
+    @property
+    def p(self):
+        return len(self.devices)
+
+    @property
+    def worker_ids(self):
+        return [f"w{i}" for i in range(self.p)]
+
+    def step(self):
+        self.step_count += 1
+        m = {"loss": 1.0 / self.step_count, "step": self.step_count,
+             "step_time": step_time(self.spec.profile, self.p)}
+        self.metrics_log.append(m)
+        return m
+
+    def grant_devices(self, devs, *, block=False):
+        self.devices.extend(devs)
+
+    def release_devices(self, n, *, victims=None, block=False):
+        assert n < self.p, "cannot release below one slice"
+        freed, self.devices = self.devices[-n:], self.devices[:-n]
+        if self.on_devices_released:
+            self.on_devices_released(self, freed)
+
+    def migrate(self, n=1, *, victims=None, block=False):
+        self._flagged_stragglers = []
+
+
+def run_fake_cluster(specs, policy, *, rounds=40, resched_every=2):
+    ex = ClusterExecutor(specs, policy, devices=list(range(4)),
+                         resched_every=resched_every,
+                         trainer_factory=FakeTrainer)
+    stats = ex.run(max_rounds=rounds)
+    return ex, stats
+
+
+def _find(events, op, name):
+    return [e for e in events if e["op"] == op and e["job"] == name]
+
+
+# ------------------------------------------------- funding under throughput
+def test_throughput_policy_scale_in_funds_scale_out():
+    """A (vgg19, over-provisioned at requested 3) scales in; the freed
+    devices fund B's (resnet50) scale-out past its requested 1 — a
+    transient loan — with the device count conserved throughout."""
+    specs = [JobSpec("a", 3, 60, profile="vgg19"),
+             JobSpec("b", 1, 60, profile="resnet50")]
+    ex, stats = run_fake_cluster(specs, MaxThroughput(), rounds=8)
+    sin, sout = _find(stats["events"], "scale_in", "a")[0], \
+        _find(stats["events"], "scale_out", "b")
+    grow = [e for e in sout if e["from_p"] > 0]
+    assert grow, "B must scale OUT from its running parallelism"
+    assert sin["from_p"] == 3 and sin["to_p"] == 1
+    assert grow[0]["to_p"] == 3 and grow[0]["loaned"] == 2, \
+        "the grant beyond requested_p is a transient loan"
+    assert stats["events"].index(sin) < stats["events"].index(grow[0]), \
+        "the scale-in must fund (precede) the scale-out"
+    assert stats["conserved"] and stats["max_loaned"] == 2
+
+
+def test_throughput_loan_reclaimed_on_demand():
+    """A later arrival reclaims B's loaned devices via graceful scale-in:
+    the loan is transient, not permanent."""
+    specs = [JobSpec("a", 3, 60, profile="vgg19"),
+             JobSpec("b", 1, 60, profile="resnet50"),
+             JobSpec("c", 2, 30, profile="googlenet", arrival=6.0)]
+    ex, stats = run_fake_cluster(specs, MaxThroughput(), rounds=16)
+    reclaim = _find(stats["events"], "scale_in", "b")
+    assert reclaim, "B's loan must be reclaimed after C arrives"
+    assert reclaim[0]["round"] >= 6
+    c_start = _find(stats["events"], "scale_out", "c")
+    assert c_start and c_start[0]["from_p"] == 0, \
+        "the reclaimed devices admit C"
+    assert stats["conserved"]
+
+
+# -------------------------------------------------- funding under Tiresias
+def test_tiresias_compaction_funds_queued_job():
+    """Elastic-Tiresias R1: a queued arrival triggers compaction —
+    running jobs past the first service quantum shrink (scale_in) and the
+    freed devices fund the newcomer's admission (scale_out from 0)."""
+    specs = [JobSpec("a", 2, 60, profile="vgg19"),
+             JobSpec("b", 2, 60, profile="resnet50"),
+             JobSpec("c", 2, 30, profile="googlenet", arrival=6.0)]
+    pol = make_policy("elastic-tiresias", quanta=(1.0, 50.0))
+    ex, stats = run_fake_cluster(specs, pol, rounds=16)
+    shrinks = [e for e in stats["events"] if e["op"] == "scale_in"
+               and e["job"] in ("a", "b")]
+    assert len(shrinks) >= 2, "both donors shrink to their QoS floor"
+    assert all(e["to_p"] == 1 for e in shrinks)
+    c_start = _find(stats["events"], "scale_out", "c")
+    assert c_start and c_start[0]["to_p"] == 2
+    assert stats["events"].index(shrinks[0]) < \
+        stats["events"].index(c_start[0])
+    assert stats["conserved"]
+
+
+def test_tiresias_expansion_regrows_after_finish():
+    """Elastic-Tiresias R2: when the short job finishes, its devices are
+    granted back to the running jobs (expansion while gain positive)."""
+    specs = [JobSpec("a", 2, 60, profile="vgg19"),
+             JobSpec("b", 2, 60, profile="resnet50"),
+             JobSpec("c", 2, 6, profile="googlenet", arrival=6.0)]
+    pol = make_policy("elastic-tiresias", quanta=(1.0, 50.0))
+    ex, stats = run_fake_cluster(specs, pol, rounds=40)
+    fin = _find(stats["events"], "finish", "c")
+    assert fin, "short job must finish"
+    regrow = [e for e in stats["events"] if e["op"] == "scale_out"
+              and e["from_p"] > 0 and e["round"] > fin[0]["round"]]
+    assert regrow, "freed devices must be re-granted to running jobs"
+    assert stats["conserved"]
+
+
+# ----------------------------------------------------- straggler migration
+def test_straggler_flag_triggers_migration():
+    specs = [JobSpec("a", 3, 60, profile="resnet50")]
+    ex = ClusterExecutor(specs, make_policy("static"),
+                         devices=list(range(3)), trainer_factory=FakeTrainer)
+    ex.run(max_rounds=3)
+    ex.jobs[0].trainer._flagged_stragglers = ["w1"]
+    ex.run(max_rounds=6)
+    mig = _find(ex.events, "migrate", "a")
+    assert mig, "flagged straggler must trigger a migrate"
+    assert ex.jobs[0].n_migrations == 1
+    assert ex.jobs[0].trainer._flagged_stragglers == []
+
+
+# ------------------------------------------------------- plan_actions unit
+def test_plan_actions_shrinks_first_and_clamps_preemption():
+    a, b, c = (ClusterJob(i, JobSpec(n, 2, 10, global_batch=12))
+               for i, n in enumerate("abc"))
+    a.trainer = FakeTrainer(a.spec, [0, 1, 2])     # running at 3
+    b.trainer = FakeTrainer(b.spec, [3])           # running at 1
+    jobs = {0: a, 1: b, 2: c}
+    acts = plan_actions(jobs, {0: 0, 1: 2, 2: 1}, 4)
+    kinds = [(x.kind, x.jid) for x in acts]
+    assert kinds[0] == ("scale_in", 0), "shrinks come first (they fund)"
+    assert acts[0].target_p == 1 and acts[0].clamped, \
+        "live preemption to 0 clamps to one slice"
+    assert ("scale_out", 1) in kinds and ("start", 2) in kinds
+
+
+def test_partial_grant_lands_on_feasible_parallelism():
+    """A grant truncated by pool availability must itself divide the
+    global batch: job at p=2 wanting 6 with only 3 free gets +2 (to 4),
+    never +3 (12 % 5 != 0 would raise inside the trainer)."""
+    specs = [JobSpec("a", 2, 40, profile="resnet50", global_batch=12),
+             JobSpec("hog", 1, 4, profile="vgg19", global_batch=12)]
+    ex = ClusterExecutor(specs, make_policy("static"),
+                         devices=list(range(6)), trainer_factory=FakeTrainer)
+    ex.run(max_rounds=2)            # a=2, hog=1 -> 3 free
+    ex._wants[0] = 6
+    ex._satisfy_wants()
+    assert ex.jobs[0].alloc == 4
+    ex._assert_conserved()
+
+
+def test_plan_actions_respects_batch_divisibility():
+    j = ClusterJob(0, JobSpec("a", 1, 10, global_batch=12))
+    j.trainer = FakeTrainer(j.spec, [0])
+    acts = plan_actions({0: j}, {0: 5}, 8)      # 12 % 5 != 0 -> 4
+    assert acts[0].target_p == 4
+
+
+# ------------------------------------ one policy interface, two substrates
+def test_max_throughput_drives_the_simulator_too():
+    """The same policy object schedules the discrete-event simulator —
+    the shared view interface of sched.base."""
+    from repro.sched.simulator import ClusterSimulator, ScalingCosts
+    from repro.sched.workload import synthetic_16
+    stats = ClusterSimulator(32, synthetic_16(), MaxThroughput(),
+                             costs=ScalingCosts(mode="edl")).run()
+    assert stats["finished"] == 16
+
+
+def test_static_policy_never_resizes():
+    specs = [JobSpec("a", 2, 30, profile="vgg19"),
+             JobSpec("b", 2, 30, profile="resnet50")]
+    ex, stats = run_fake_cluster(specs, make_policy("static"), rounds=40)
+    resizes = [e for e in stats["events"]
+               if e["op"] in ("scale_in",)
+               or (e["op"] == "scale_out" and e["from_p"] > 0)]
+    assert resizes == []
+    assert stats["finished"] == 2
+
+
+# ----------------------------------------------------------- live (slow)
+def run_cluster_driver(*extra, devices=4, timeout=900):
+    cmd = [sys.executable, "-m", "repro.launch.cluster", "--json",
+           "--devices", str(devices), *extra]
+    env = {**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")}
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                         cwd=ROOT, timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+def test_live_cluster_throughput_policy_transfers_devices():
+    s = run_cluster_driver(
+        "--policy", "throughput",
+        "--jobs", "a=vgg19:3:20@0,b=resnet50:1:25@0,c=googlenet:1:12@6")
+    assert s["conserved"] is True
+    assert s["finished"] == 3, s["jobs"]
+    sin = [e for e in s["events"] if e["op"] == "scale_in"]
+    grow = [e for e in s["events"] if e["op"] == "scale_out"
+            and e["from_p"] > 0]
+    assert sin and grow, "need a live scale_in funding a live scale_out"
+    assert any(s["events"].index(i) < s["events"].index(g)
+               and i["jid"] != g["jid"] for i in sin for g in grow)
+    assert s["max_loaned"] >= 1, "transient loan must occur"
+    for j in s["jobs"]:     # all three trained for real
+        assert j["final_loss"] is not None
+
+
+@pytest.mark.slow
+def test_live_cluster_tiresias_policy_transfers_devices():
+    s = run_cluster_driver(
+        "--policy", "elastic-tiresias",
+        "--jobs", "a=vgg19:2:20@0,b=resnet50:2:25@0,c=googlenet:2:12@6")
+    assert s["conserved"] is True
+    assert s["finished"] == 3, s["jobs"]
+    sin = [e for e in s["events"] if e["op"] == "scale_in"]
+    souts = [e for e in s["events"] if e["op"] == "scale_out"]
+    assert sin, "compaction must shrink a donor"
+    funded = [o for o in souts for i in sin
+              if s["events"].index(i) < s["events"].index(o)
+              and i["jid"] != o["jid"]]
+    assert funded, "a scale_in must fund another job's scale_out"

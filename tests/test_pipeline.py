@@ -1,20 +1,22 @@
 """Dynamic data pipeline: the exactly-once property under arbitrary scaling
-schedules (hypothesis), progress piggybacking, graceful-exit re-queueing, and
+schedules (hypothesis when available, deterministic cases otherwise),
+progress piggybacking, graceful-exit re-queueing, dead-worker accounting, and
 checkpoint/restore."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
 
 from repro.data.pipeline import DynamicDataPipeline
 from repro.data.synthetic import SyntheticTokenDataset
 from repro.data.worker import WorkerDataIterator
 
 
-@settings(max_examples=30, deadline=None)
-@given(n_samples=st.integers(16, 200), d=st.integers(2, 12),
-       p0=st.integers(1, 4),
-       events=st.lists(st.booleans(), max_size=8),
-       seed=st.integers(0, 10_000), draw_n=st.integers(1, 7))
-def test_exactly_once_under_scaling(n_samples, d, p0, events, seed, draw_n):
+def _check_exactly_once(n_samples, d, p0, events, seed, draw_n):
     """EVERY sample id is consumed exactly once per epoch for random
     partition counts, initial parallelism, and scale-in/out schedules
     (True = add a worker at that step, False = gracefully remove one)."""
@@ -63,6 +65,37 @@ def test_exactly_once_under_scaling(n_samples, d, p0, events, seed, draw_n):
     ids = np.concatenate(consumed) if consumed else np.array([], np.int64)
     assert sorted(ids.tolist()) == list(range(n_samples)), \
         "epoch must cover the dataset exactly once (no repeat, no omission)"
+
+
+# deterministic non-hypothesis coverage of the fuzzed property
+EXACTLY_ONCE_CASES = [
+    # n_samples, d, p0, events, seed, draw_n
+    (16, 2, 1, [], 0, 1),
+    (64, 8, 2, [True, False, True], 1, 3),
+    (100, 12, 4, [False, False, True, False], 7, 5),
+    (200, 7, 3, [True, True, False, False, True, False], 42, 7),
+    (17, 5, 2, [False, True], 13, 2),      # ragged partitions
+]
+
+
+@pytest.mark.parametrize("n_samples,d,p0,events,seed,draw_n",
+                         EXACTLY_ONCE_CASES)
+def test_exactly_once_fixed_cases(n_samples, d, p0, events, seed, draw_n):
+    _check_exactly_once(n_samples, d, p0, events, seed, draw_n)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(n_samples=st.integers(16, 200), d=st.integers(2, 12),
+           p0=st.integers(1, 4),
+           events=st.lists(st.booleans(), max_size=8),
+           seed=st.integers(0, 10_000), draw_n=st.integers(1, 7))
+    def test_exactly_once_under_scaling(n_samples, d, p0, events, seed,
+                                        draw_n):
+        _check_exactly_once(n_samples, d, p0, events, seed, draw_n)
+else:
+    def test_exactly_once_under_scaling():
+        pytest.importorskip("hypothesis")
 
 
 def test_graceful_exit_requeues_remainder():
@@ -124,6 +157,79 @@ def test_progress_reporting_matches_offsets():
     assert off == 6
     it.draw(6)
     assert it.progress()[1] == 12
+
+
+def test_dead_worker_release_replays_unreported_draws():
+    """release(dead=True) replays the dead worker's partition from its
+    assignment offset: nothing is lost, the only duplicates are the dead
+    worker's draws since the last durable offset, and the epoch still rolls
+    exactly when every partition completes."""
+    ds = SyntheticTokenDataset(64, 8, 97)
+    pipe = DynamicDataPipeline(64, 4)     # partitions of 16
+    w1 = WorkerDataIterator("w1", pipe, ds, prefetch=False)
+    first5 = w1.draw(5)["sample_ids"].tolist()
+    w1.graceful_exit()                    # requeued at durable offset 5
+    w2 = WorkerDataIterator("w2", pipe, ds, prefetch=False)
+    dead3 = w2.draw(3)["sample_ids"].tolist()   # resumes the returned chunk
+    pipe.release("w2", dead=True)         # worker dies before reporting
+    drain = WorkerDataIterator("drain", pipe, ds, prefetch=False)
+    got = []
+    while pipe.epoch == 0:
+        d = drain.draw(7)
+        if d is None:
+            break
+        got.extend(d["sample_ids"].tolist())
+    allids = first5 + dead3 + got   # dead3: drawn pre-death, then replayed
+    assert sorted(set(allids)) == list(range(64)), "no sample may be lost"
+    dupes = sorted(x for x in set(allids) if allids.count(x) > 1)
+    assert dupes == sorted(dead3), \
+        "duplicates must be exactly the dead worker's unreported draws"
+    assert pipe.epoch == 1, "epoch must roll once all partitions complete"
+
+
+def test_dead_worker_before_any_draw_loses_nothing():
+    ds = SyntheticTokenDataset(32, 4, 97)
+    pipe = DynamicDataPipeline(32, 4)
+    w = WorkerDataIterator("w0", pipe, ds, prefetch=False)
+    pipe.next_assignment("w1")            # assigned but never read
+    got = [w.draw(4)["sample_ids"].tolist()]
+    pipe.release("w1", dead=True)
+    while pipe.epoch == 0:
+        d = w.draw(4)
+        if d is None:
+            break
+        got.append(d["sample_ids"].tolist())
+    ids = sorted(x for chunk in got for x in chunk)
+    assert ids == list(range(32))
+
+
+def test_state_dict_roundtrip_with_inflight_assignments():
+    """Checkpoint taken while several workers hold partially-consumed
+    assignments: restore must re-serve exactly the unconsumed remainder
+    (in-flight work treated as returned at the last reported offset)."""
+    ds = SyntheticTokenDataset(96, 8, 97)     # partitions of 12
+    pipe = DynamicDataPipeline(96, 8, seed=5)
+    seen = []
+    iters = {}
+    for i in range(3):
+        it = WorkerDataIterator(f"w{i}", pipe, ds, prefetch=False)
+        iters[f"w{i}"] = it
+        seen.extend(it.draw(5)["sample_ids"].tolist())   # mid-partition
+    assert len(pipe._in_flight) == 3
+    state = pipe.state_dict()
+
+    pipe2 = DynamicDataPipeline(96, 8, seed=5)
+    pipe2.load_state_dict(state)
+    assert pipe2._in_flight == {}
+    drain = WorkerDataIterator("drain", pipe2, ds, prefetch=False)
+    rest = []
+    while pipe2.epoch == 0:
+        d = drain.draw(9)
+        if d is None:
+            break
+        rest.extend(d["sample_ids"].tolist())
+    assert sorted(seen + rest) == list(range(96))
+    assert pipe2.epoch == 1, "restored pipeline must roll the epoch"
 
 
 def test_deterministic_dataset():
