@@ -1,7 +1,7 @@
 # Tier-1 verification and common entry points (see ROADMAP.md).
 PY ?= python
 
-.PHONY: test test-fast cluster-demo bench-cluster
+.PHONY: test test-fast docs-check cluster-demo bench-cluster
 
 # the tier-1 command: full suite, fail fast
 test:
@@ -10,6 +10,11 @@ test:
 # skip the multi-device subprocess integration tests (~seconds, not minutes)
 test-fast:
 	$(PY) -m pytest -x -q -m "not slow"
+
+# docs cannot rot: compile every fenced python block in README.md/docs and
+# shape-check the quickstart the README points at
+docs-check:
+	PYTHONPATH=src $(PY) tools/docs_check.py
 
 cluster-demo:
 	PYTHONPATH=src $(PY) examples/multi_tenant_cluster.py

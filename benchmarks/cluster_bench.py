@@ -35,12 +35,15 @@ def main():
         t0 = time.monotonic()
         ex = ClusterExecutor(specs, make_policy(name))
         stats = ex.run(max_rounds=300)
+        ex.close()
         wall = time.monotonic() - t0
         jct = stats["mean_jct"]     # None when nothing finished in budget
         results[name] = {"mean_jct": jct,
                          "makespan": stats["makespan"],
                          "finished": stats["finished"],
                          "max_loaned": stats["max_loaned"],
+                         "preemptions": stats["preemptions"],
+                         "readmissions": stats["readmissions"],
                          "events": len(stats["events"]),
                          "wall_s": round(wall, 2)}
         emit(f"cluster_{name}", wall * 1e6,

@@ -3,10 +3,17 @@ device pool; the scheduling policy retunes their parallelism live —
 scale-in on an over-provisioned job funds scale-out (a transient loan) on a
 better-scaling one, a late arrival reclaims the loan, and every device move
 is a real stop-free ElasticTrainer topology switch, not a simulated tick.
+Policies may also assign a running tenant 0 GPUs: the executor
+checkpoint-stops it to disk, hands all of its devices to the winners, and
+re-admits it from the saved state once capacity frees up.
 
   PYTHONPATH=src python examples/multi_tenant_cluster.py
   PYTHONPATH=src python examples/multi_tenant_cluster.py \
       --policy elastic-tiresias --devices 4
+  # preemptive time-sharing under plain Tiresias
+  PYTHONPATH=src python examples/multi_tenant_cluster.py \
+      --policy tiresias --quanta 0.1,1000 \
+      --jobs "a=resnet50:2:20@0,b=vgg19:4:12@6"
 
 Pass --jobs to change the tenant mix (grammar:
 ``name=profile:requested_p:total_steps@arrival_round``).

@@ -5,6 +5,10 @@ steps on synthetic data, then greedy-decode with the KV cache.
 
 Any of the 10 assigned architectures works via --arch (reduced smoke variant
 on CPU; the full configs are exercised by the multi-pod dry-run).
+
+``--dry-run`` validates the whole training-step program via jax.eval_shape
+— no compile, no training — in a few seconds; `make docs-check` uses it to
+keep this example from rotting.
 """
 import argparse
 import sys
@@ -18,6 +22,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="edl-paper")
     ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="shape-check the training step (no compile/train)")
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -31,6 +37,18 @@ def main():
     print(f"arch={cfg.name} family={cfg.family} layers={cfg.n_layers} "
           f"d_model={cfg.d_model}")
     opt = adamw(3e-3)
+
+    if args.dry_run:
+        from repro.configs.base import InputShape, input_specs
+        from repro.training.step import state_shape_structs
+        specs = input_specs(cfg, InputShape("rt", 64, 8, "train"))
+        specs.pop("cache", None)
+        new_state, metrics = jax.eval_shape(
+            make_train_step(cfg, opt), state_shape_structs(cfg, opt), specs)
+        print(f"dry-run OK: state leaves={len(jax.tree.leaves(new_state))} "
+              f"metrics={sorted(metrics)}")
+        return 0
+
     state = init_train_state(cfg, opt, jax.random.PRNGKey(0))
     step = jax.jit(make_train_step(cfg, opt))
 

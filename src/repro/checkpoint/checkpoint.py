@@ -4,7 +4,11 @@ job resumes exactly-once data consumption — EDL §4.3's requirement that the
 partition permutation list and worker progress are checkpointed too.
 
 Format: one .npz for arrays (flattened pytree paths as keys) + a JSON sidecar
-for pipeline/meta state. Consistent-recovery (§4.2) writes these periodically.
+for pipeline/meta state (atomic replace). Consistent-recovery (§4.2) writes
+these periodically; the same format backs the stop-resume rescale baseline
+and the cluster executor's checkpoint-stop preemption / re-admission path
+(core.stop_resume: checkpoint_save / resume_from_checkpoint — the ``extra``
+dict carries the step/sample counters a restored job resumes from).
 """
 from __future__ import annotations
 
@@ -44,7 +48,12 @@ def save_checkpoint(path: str, state, *, step: int | None = None,
                     extra: dict | None = None):
     os.makedirs(path, exist_ok=True)
     flat = _flatten_with_paths(jax.device_get(state))
-    np.savez(os.path.join(path, "state.npz"), **flat)
+    # atomic replace: a job preempted twice reuses its checkpoint dir, so a
+    # save that dies mid-write must not tear the previous good state
+    # (np.savez appends .npz to extension-less names — keep the suffix)
+    tmp_npz = os.path.join(path, "state.tmp.npz")
+    np.savez(tmp_npz, **flat)
+    os.replace(tmp_npz, os.path.join(path, "state.npz"))
     meta = {"step": int(step if step is not None
                         else np.asarray(flat.get("step", 0))),
             "pipeline": pipeline_state, "extra": extra or {}}

@@ -1,6 +1,8 @@
-from repro.cluster.executor import ClusterExecutor, default_trainer_factory
-from repro.cluster.job import ClusterJob, JobSpec
+from repro.cluster.executor import ClusterExecutor, DiskCheckpointer, \
+    default_trainer_factory
+from repro.cluster.job import ClusterJob, JobSpec, JobState
 from repro.cluster.policy import Action, make_policy, plan_actions
 
-__all__ = ["ClusterExecutor", "default_trainer_factory", "ClusterJob",
-           "JobSpec", "Action", "make_policy", "plan_actions"]
+__all__ = ["ClusterExecutor", "DiskCheckpointer", "default_trainer_factory",
+           "ClusterJob", "JobSpec", "JobState", "Action", "make_policy",
+           "plan_actions"]

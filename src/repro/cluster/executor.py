@@ -16,20 +16,31 @@ allocation map, which is diffed into real elastic actions:
             LOAN (§6.2): the pool stays fully utilized and the next
             rebalance reclaims the loan on demand via graceful scale-in;
   start   — a pending job is admitted (trainer built) once enough devices
-            are free — typically funded by another job's shrink;
+            are free — typically funded by another job's shrink. If the job
+            carries a checkpoint handle this is a RE-ADMISSION: the saved
+            optimizer/model/data-pipeline state is restored onto whatever
+            devices the policy granted this time;
+  preempt — a 0-GPU target for a running job checkpoint-stops it
+            (core.stop_resume): the save runs in the background while the
+            job's devices stay in its pool, then the trainer is torn down,
+            ALL devices come home, and the job is parked PREEMPTED — it
+            re-enters the pending queue as re-admittable demand;
   migrate — straggler-triggered (§5.2): workers flagged by the job's
             StragglerDetector are cycled out in one fused switch.
 
-Device conservation — sum of per-job device pools plus the free pool equals
-the cluster size — is asserted after every round; devices move ownership
-only synchronously (grant) or at a commit boundary (release/finish), so the
-invariant is exact even with scale operations in flight.
+Device conservation — running jobs' pools, plus devices held by in-flight
+preemption checkpoints, plus the free pool equals the cluster size — is
+asserted after every round; devices move ownership only synchronously
+(grant), at a commit boundary (release/finish), or when a checkpoint save
+lands (preempt), so the invariant is exact even with scale operations and
+checkpoints in flight.
 """
 from __future__ import annotations
 
+import threading
 import time
 
-from repro.cluster.job import ClusterJob, JobSpec
+from repro.cluster.job import ClusterJob, JobSpec, JobState
 from repro.cluster.policy import plan_actions
 from repro.core.scaling import Busy, Phase
 
@@ -48,10 +59,96 @@ def default_trainer_factory(spec: JobSpec, devices: list):
         time_allowance_s=0.1)
 
 
+class DiskCheckpointer:
+    """Preemption backend for real ElasticTrainers.
+
+    Protocol (anything implementing it can drive the executor's
+    preemption lifecycle — the fast tests substitute an in-memory fake):
+
+      begin(job)     — start persisting the running trainer's state; must
+                       not block the executor loop (here: a background
+                       thread running core.stop_resume.checkpoint_save).
+      done(job)      — True once the save landed (re-raises any save error).
+      teardown(job)  — drop the stopped trainer's state/executables and
+                       return ALL of its devices.
+      restore(job, trainer) — load the saved state into a freshly built
+                       trainer on the newly granted device set.
+      wait(job, timeout) — optional: block until the save lands (or the
+                       timeout passes). Without it the executor falls back
+                       to polling ``done`` with a short sleep.
+      discard(job)   — optional: drop the saved state once the job can
+                       never be re-admitted again (it finished).
+    """
+
+    def __init__(self, root: str | None = None):
+        self.root = root
+
+    def begin(self, job: ClusterJob):
+        import tempfile
+        from repro.core.stop_resume import checkpoint_save
+        if job.checkpoint is None:
+            job.checkpoint = tempfile.mkdtemp(
+                prefix=f"edl_preempt_{job.spec.name}_", dir=self.root)
+        job._ckpt_error = None
+
+        def run():
+            try:
+                checkpoint_save(job.trainer, job.checkpoint)
+            except BaseException as e:      # surfaced by done()
+                job._ckpt_error = e
+        job._ckpt_thread = threading.Thread(target=run, daemon=True)
+        job._ckpt_thread.start()
+
+    def done(self, job: ClusterJob) -> bool:
+        t = job._ckpt_thread
+        if t is not None and t.is_alive():
+            return False
+        if t is not None:
+            t.join()
+            job._ckpt_thread = None
+        err = getattr(job, "_ckpt_error", None)
+        if err is not None:
+            raise err
+        return True
+
+    def wait(self, job: ClusterJob, timeout: float = 60.0):
+        t = job._ckpt_thread
+        if t is not None and t.is_alive():
+            t.join(timeout)
+
+    def teardown(self, job: ClusterJob) -> list:
+        from repro.core.stop_resume import teardown_trainer
+        return teardown_trainer(job.trainer)
+
+    def restore(self, job: ClusterJob, trainer):
+        from repro.core.stop_resume import resume_from_checkpoint
+        resume_from_checkpoint(trainer, job.checkpoint)
+
+    def discard(self, job: ClusterJob):
+        """Drop the job's checkpoint directory (job finished — the saved
+        state can never be re-admitted again)."""
+        import shutil
+        if job.checkpoint is not None:
+            shutil.rmtree(job.checkpoint, ignore_errors=True)
+            job.checkpoint = None
+
+
 class ClusterExecutor:
+    """Drives N tenants on one device pool under a scheduling policy.
+
+    Exposes the sched-view protocol (``n_gpus`` / ``now`` / ``running`` /
+    ``pending``) so policies written for the simulator run unchanged.
+    Parked (PREEMPTED) jobs sit in ``pending`` — policies see them as
+    re-admittable demand with their attained service and original arrival
+    intact. Jobs mid-checkpoint are in neither view: their devices are not
+    yet reclaimable and they cannot be stepped, so the policy simply does
+    not reason about them until the save lands.
+    """
+
     def __init__(self, specs: list[JobSpec], policy, *, devices=None,
                  resched_every: int = 4, trainer_factory=None,
-                 prep_yield_s: float = 0.15, serialize_prep: bool = True):
+                 prep_yield_s: float = 0.15, serialize_prep: bool = True,
+                 checkpointer=None):
         if devices is None:
             import jax
             devices = jax.devices()
@@ -63,16 +160,17 @@ class ClusterExecutor:
         self.trainer_factory = trainer_factory or default_trainer_factory
         self.prep_yield_s = prep_yield_s
         self.serialize_prep = serialize_prep
+        self.checkpointer = checkpointer or DiskCheckpointer()
         self.jobs = {jid: ClusterJob(jid, s) for jid, s in enumerate(specs)}
         self.pending: list[ClusterJob] = []
         self.running: dict[int, ClusterJob] = {}
+        self.checkpointing: dict[int, ClusterJob] = {}
         self.finished: list[ClusterJob] = []
         self._to_arrive = sorted(self.jobs.values(),
                                  key=lambda j: (j.arrival, j.jid))
         self._wants: dict[int, int] = {}        # jid -> target parallelism
         self.round = 0
         self.events: list[dict] = []
-        self.preempt_clamps = 0
 
     # the policy-view clock: scheduling rounds (see sched.base on units)
     @property
@@ -80,11 +178,15 @@ class ClusterExecutor:
         return float(self.round)
 
     # ------------------------------------------------------------- events
-    def _event(self, op: str, job: ClusterJob, from_p: int, to_p: int):
-        self.events.append({
+    def _event(self, op: str, job: ClusterJob, from_p: int, to_p: int,
+               devices=None):
+        e = {
             "round": self.round, "op": op, "job": job.spec.name,
             "jid": job.jid, "from_p": from_p, "to_p": to_p,
-            "loaned": max(0, to_p - job.requested_p)})
+            "loaned": max(0, to_p - job.requested_p)}
+        if devices is not None:
+            e["devices"] = [getattr(d, "id", d) for d in devices]
+        self.events.append(e)
 
     def _on_devices_released(self, trainer, freed: list):
         """ElasticTrainer hand-off hook: a release_devices scale-in (or a
@@ -95,7 +197,8 @@ class ClusterExecutor:
         self.free.extend(freed)
         job = self.jobs.get(getattr(trainer, "_cluster_jid", -1))
         if job is not None:
-            self._event("scale_in", job, job.alloc + len(freed), job.alloc)
+            self._event("scale_in", job, job.alloc + len(freed), job.alloc,
+                        devices=freed)
 
     # ---------------------------------------------------------- admission
     def _admit_arrivals(self):
@@ -109,15 +212,69 @@ class ClusterExecutor:
                 self.pending.append(job)
 
     def _start(self, job: ClusterJob, p: int):
+        """Admit ``job`` on ``p`` devices from the free pool. When the job
+        carries a checkpoint handle this is a re-admission: the fresh
+        trainer (possibly on a different device set / parallelism) is
+        restored from the saved state before it takes its first step."""
         devs = [self.free.pop(0) for _ in range(p)]
         trainer = job.launch(devs, self.trainer_factory)
         trainer.on_devices_released = self._on_devices_released
         trainer._cluster_jid = job.jid
         if job in self.pending:
             self.pending.remove(job)
+        readmit = job.checkpoint is not None
+        if readmit:
+            self.checkpointer.restore(job, trainer)
         self.running[job.jid] = job
         self._wants.pop(job.jid, None)
-        self._event("scale_out", job, 0, p)
+        self._event("readmit" if readmit else "scale_out", job, 0, p,
+                    devices=devs)
+
+    # --------------------------------------------------------- preemption
+    def _preempt(self, job: ClusterJob):
+        """RUNNING -> CHECKPOINTING: stop scheduling the job and start
+        persisting its state. Its devices stay in the trainer's pool until
+        the save lands (pending-checkpoint accounting in the conservation
+        assert), so a slow checkpoint can never double-fund a grant."""
+        del self.running[job.jid]
+        self._wants.pop(job.jid, None)
+        job.begin_checkpoint()
+        self.checkpointer.begin(job)
+        self.checkpointing[job.jid] = job
+        self._event("checkpoint", job, job.alloc, job.alloc)
+        if self.checkpointer.done(job):     # synchronous checkpointer
+            self._finalize_preempt(job)
+
+    def _finalize_preempt(self, job: ClusterJob):
+        """CHECKPOINTING -> PREEMPTED: the save landed. Tear the trainer
+        down, return ALL devices to the pool, and park the job back in the
+        pending queue as re-admittable demand."""
+        p = job.alloc
+        freed = self.checkpointer.teardown(job)
+        self.free.extend(freed)
+        job.park()
+        del self.checkpointing[job.jid]
+        self.pending.append(job)
+        self._event("preempt", job, p, 0, devices=freed)
+
+    def _collect_checkpoints(self):
+        for jid in list(self.checkpointing):
+            job = self.checkpointing[jid]
+            if self.checkpointer.done(job):
+                self._finalize_preempt(job)
+
+    def _await_checkpoint(self):
+        """Nothing can step until a save lands: block on the in-flight
+        checkpoint instead of burning scheduling rounds at zero wall time
+        — the round counter is the policy clock, so spinning it would
+        distort arrival/JCT accounting and can exhaust max_rounds in
+        microseconds while the save thread has barely started."""
+        job = next(iter(self.checkpointing.values()))
+        wait = getattr(self.checkpointer, "wait", None)
+        if wait is not None:
+            wait(job, 60.0)
+        else:
+            time.sleep(0.01)    # poll-only checkpointer still in flight
 
     # --------------------------------------------------------- scheduling
     def _prep_in_flight(self) -> bool:
@@ -128,6 +285,13 @@ class ClusterExecutor:
         alloc = self.policy(self)
         for act in plan_actions(self.jobs, alloc, self.n_gpus):
             job = self.jobs[act.jid]
+            if act.kind == "preempt":
+                # no compile involved, so exempt from the one-prep rule;
+                # a job mid-switch is skipped and re-planned next resched
+                if act.jid in self.running and \
+                        job.trainer.controller.phase is Phase.IDLE:
+                    self._preempt(job)
+                continue
             if self.serialize_prep and self._prep_in_flight():
                 # one context-prep at a time cluster-wide: concurrent
                 # background compiles starve each other on small hosts and
@@ -140,20 +304,21 @@ class ClusterExecutor:
                     job.trainer.release_devices(cur - act.target_p)
                 except Busy:
                     continue        # a switch is in flight; next resched
-                if act.clamped:
-                    self.preempt_clamps += 1
                 self._wants.pop(act.jid, None)
                 # the scale_in event logs in _on_devices_released at commit
             else:                   # start / scale_out: wait for devices
                 self._wants[act.jid] = act.target_p
-        # drop stale wants for jobs the policy no longer wants to grow
+        # drop stale wants for jobs the policy no longer wants to grow —
+        # including an explicit 0 target for a parked job (a revoked
+        # re-admission must not launch later against the current decision)
         for jid in list(self._wants):
-            if jid not in alloc or self.jobs[jid].finish_time is not None:
+            if not alloc.get(jid) or self.jobs[jid].finish_time is not None:
                 del self._wants[jid]
 
     def _satisfy_wants(self):
         """Grant free devices toward wanted growth, FIFO by arrival —
-        this is where one job's scale-in funds another's scale-out."""
+        this is where one job's scale-in (or preemption) funds another's
+        scale-out or a parked job's re-admission."""
         for jid in sorted(self._wants,
                           key=lambda i: (self.jobs[i].arrival, i)):
             job, target = self.jobs[jid], self._wants[jid]
@@ -180,7 +345,7 @@ class ClusterExecutor:
             except (Busy, ValueError):
                 self.free = devs + self.free
                 continue
-            self._event("scale_out", job, cur, cur + take)
+            self._event("scale_out", job, cur, cur + take, devices=devs)
             if cur + take >= target:
                 del self._wants[jid]
 
@@ -215,39 +380,65 @@ class ClusterExecutor:
         if t is not None and t.is_alive():
             t.join(timeout=120)
         p = job.alloc
-        self.free.extend(job.trainer.devices)
+        freed = list(job.trainer.devices)
+        self.free.extend(freed)
         job.trainer.devices = []
+        job.state = JobState.FINISHED
         del self.running[job.jid]
         self._wants.pop(job.jid, None)
+        if job.checkpoint is not None:      # preempted earlier: the parked
+            discard = getattr(self.checkpointer, "discard", None)
+            if discard is not None:         # state is now unreachable
+                discard(job)
         self.finished.append(job)
-        self._event("finish", job, p, 0)
+        self._event("finish", job, p, 0, devices=freed)
 
     def _assert_conserved(self):
-        owned = sum(j.alloc for j in self.jobs.values())
-        assert owned + len(self.free) == self.n_gpus, \
-            (f"device leak: {owned} owned + {len(self.free)} free "
-             f"!= {self.n_gpus}")
+        """Every device is in exactly one place: a live job's pool, a
+        mid-checkpoint job's pool (held until the save lands), or free."""
+        live = sum(j.alloc for j in self.jobs.values()
+                   if j.jid not in self.checkpointing)
+        pending_ckpt = sum(j.alloc for j in self.checkpointing.values())
+        assert live + pending_ckpt + len(self.free) == self.n_gpus, \
+            (f"device leak: {live} live + {pending_ckpt} checkpointing "
+             f"+ {len(self.free)} free != {self.n_gpus}")
 
     # -------------------------------------------------------------- driver
     def run(self, *, max_rounds: int = 10_000) -> dict:
-        while (self.running or self.pending or self._to_arrive) \
-                and self.round < max_rounds:
-            self._admit_arrivals()
-            if self.round and self.round % self.resched_every == 0:
-                self._reschedule()
-            self._satisfy_wants()
-            for job in list(self.running.values()):
-                self._step_job(job)
-            self._assert_conserved()
-            # cooperative yield: background context-prep threads share the
-            # host's cores with training; on small hosts back-to-back steps
-            # can starve an in-flight compile indefinitely
-            if self.prep_yield_s and any(
-                    j.trainer.controller.phase is Phase.PREPARING
-                    for j in self.running.values()):
-                time.sleep(self.prep_yield_s)
-            self.round += 1
+        try:
+            while (self.running or self.pending or self.checkpointing
+                   or self._to_arrive) and self.round < max_rounds:
+                self._admit_arrivals()
+                self._collect_checkpoints()
+                if self.round and self.round % self.resched_every == 0:
+                    self._reschedule()
+                self._satisfy_wants()
+                for job in list(self.running.values()):
+                    self._step_job(job)
+                if not self.running and self.checkpointing:
+                    self._await_checkpoint()
+                self._assert_conserved()
+                # cooperative yield: background context-prep threads share
+                # the host's cores with training; on small hosts
+                # back-to-back steps can starve an in-flight compile
+                if self.prep_yield_s and any(
+                        j.trainer.controller.phase is Phase.PREPARING
+                        for j in self.running.values()):
+                    time.sleep(self.prep_yield_s)
+                self.round += 1
+        except BaseException:
+            # contained shutdown on the error path: join compile/save
+            # threads best-effort so a daemon thread still inside an XLA
+            # compile cannot abort the whole process at interpreter exit
+            # and mask the real error
+            self._drain_prep_threads()
+            try:
+                self._drain_checkpoints()
+            except BaseException:
+                pass
+            raise
         self._drain_prep_threads()
+        self._drain_checkpoints()
         return self.stats()
 
     def _drain_prep_threads(self):
@@ -258,6 +449,31 @@ class ClusterExecutor:
             t = getattr(job.trainer, "_prep_thread", None)
             if t is not None and t.is_alive():
                 t.join(timeout=120)
+
+    def _drain_checkpoints(self):
+        """Land in-flight checkpoint saves at loop exit so parked state is
+        durable and the final stats see every landed device as free. A save
+        that is still not done after the wait timeout stays CHECKPOINTING —
+        its devices remain accounted to the job, never leaked."""
+        wait = getattr(self.checkpointer, "wait", None)
+        if wait is not None:
+            for job in list(self.checkpointing.values()):
+                wait(job, 120.0)
+        self._collect_checkpoints()
+
+    def close(self):
+        """Discard every job's on-disk checkpoint state. Checkpoint handles
+        live only in this process, so once the executor will not be run()
+        again nothing can ever re-admit a parked job — without this, runs
+        ending with PREEMPTED jobs (or max_rounds exhaustion) leak
+        full-model state dumps in the checkpoint root. run() itself stays
+        re-enterable; call close() only when done with the executor."""
+        discard = getattr(self.checkpointer, "discard", None)
+        if discard is None:
+            return
+        for job in self.jobs.values():
+            if job.checkpoint is not None:
+                discard(job)
 
     # ------------------------------------------------------------- results
     def stats(self) -> dict:
@@ -272,7 +488,10 @@ class ClusterExecutor:
             "makespan": max((j.finish_time for j in self.finished),
                             default=None),
             "max_loaned": max((e["loaned"] for e in self.events), default=0),
-            "preempt_clamps": self.preempt_clamps,
+            "preemptions": sum(1 for e in self.events
+                               if e["op"] == "preempt"),
+            "readmissions": sum(1 for e in self.events
+                                if e["op"] == "readmit"),
             "conserved": True,      # run() asserts it every round
             "jobs": [self.jobs[jid].summary() for jid in sorted(self.jobs)],
             "events": self.events,

@@ -4,10 +4,36 @@
 live ``ElasticTrainer`` (created lazily when the job is first admitted) and
 exposes the scheduling-view attributes (repro.sched.base) so the same policy
 objects that drive the discrete-event simulator drive live jobs.
+
+Preemption state machine (driven by the executor)::
+
+    PENDING ──launch──▶ RUNNING ──begin_checkpoint──▶ CHECKPOINTING
+                          ▲                                │
+                          │                              park
+                       launch                              ▼
+                    (re-admission,                     PREEMPTED
+                  restore from ckpt) ◀─────────────────────┘
+    RUNNING ──finish──▶ FINISHED
+
+A CHECKPOINTING job still OWNS its devices (they stay in the trainer's pool
+until the checkpoint save lands, keeping cluster-wide device conservation
+exact); a PREEMPTED job owns nothing but keeps its checkpoint handle, its
+accumulated ``steps_done`` / ``attained_gpu_s``, and its original arrival
+time — so re-admission priority and Tiresias service accounting survive the
+round trip through disk.
 """
 from __future__ import annotations
 
 import dataclasses
+import enum
+
+
+class JobState(enum.Enum):
+    PENDING = "pending"             # arrived, never launched
+    RUNNING = "running"             # live trainer stepping
+    CHECKPOINTING = "checkpointing"  # preempted; save in flight, owns devices
+    PREEMPTED = "preempted"         # parked on disk, re-admittable demand
+    FINISHED = "finished"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,11 +69,17 @@ class ClusterJob:
         self.jid = jid
         self.spec = spec
         self.trainer = None
+        self.state = JobState.PENDING
         self.steps_done = 0
         self.attained_gpu_s = 0.0       # Tiresias service metric
         self.start_time: float | None = None
         self.finish_time: float | None = None
         self.n_migrations = 0
+        self.n_preemptions = 0
+        self.checkpoint = None          # opaque handle (dir path on disk)
+        self.last_loss: float | None = None
+        self.last_step: int | None = None
+        self._ckpt_thread = None        # set by the executor's checkpointer
 
     # ------------------------------------------------- policy view protocol
     @property
@@ -69,8 +101,9 @@ class ClusterJob:
     @property
     def alloc(self) -> int:
         """Devices this job currently OWNS (its whole pool — during an
-        in-flight release they still count here until the switch commits,
-        which is what keeps cluster-wide conservation exact)."""
+        in-flight release OR an in-flight preemption checkpoint they still
+        count here until the switch commits / the save lands, which is what
+        keeps cluster-wide conservation exact)."""
         return len(self.trainer.devices) if self.trainer is not None else 0
 
     @property
@@ -79,14 +112,34 @@ class ClusterJob:
 
     # ------------------------------------------------------------ lifecycle
     def launch(self, devices: list, trainer_factory):
+        """Build the live trainer on ``devices``. Used both for first
+        admission and for re-admission after a preemption (the executor
+        restores the checkpoint into the fresh trainer right after)."""
         assert self.trainer is None, f"{self.spec.name} already launched"
+        assert self.state in (JobState.PENDING, JobState.PREEMPTED), \
+            f"cannot launch from {self.state}"
         self.trainer = trainer_factory(self.spec, list(devices))
+        self.state = JobState.RUNNING
         return self.trainer
 
+    def begin_checkpoint(self):
+        """RUNNING -> CHECKPOINTING: the job stops stepping; its devices
+        stay in the trainer's pool until the save lands."""
+        assert self.state is JobState.RUNNING, self.state
+        self.state = JobState.CHECKPOINTING
+
+    def park(self):
+        """CHECKPOINTING -> PREEMPTED: the save landed and the trainer was
+        torn down; the job owns nothing but its checkpoint handle."""
+        assert self.state is JobState.CHECKPOINTING, self.state
+        self.trainer = None
+        self.state = JobState.PREEMPTED
+        self.n_preemptions += 1
+
     def feasible_p(self, target: int) -> int:
-        """Largest parallelism <= target the job can actually run at
-        (global batch must divide evenly; live jobs cannot stop at 0 —
-        checkpoint-based full preemption is a ROADMAP follow-on)."""
+        """Largest parallelism <= target the job can actually run at (the
+        global batch must divide evenly). 0 means full preemption: the
+        executor checkpoint-stops the job and re-admits it later."""
         if target < 1:
             return 0
         q = target
@@ -99,11 +152,14 @@ class ClusterJob:
             self.start_time = now
         self.steps_done += 1
         self.attained_gpu_s += self.alloc * metrics.get("step_time", 0.0)
+        self.last_loss = metrics.get("loss")
+        self.last_step = metrics.get("step")
 
     def summary(self) -> dict:
         return {
             "name": self.spec.name, "jid": self.jid,
             "profile": self.spec.profile,
+            "state": self.state.value,
             "requested_p": self.spec.requested_p,
             "steps_done": self.steps_done,
             "attained_gpu_s": round(self.attained_gpu_s, 3),
@@ -111,9 +167,8 @@ class ClusterJob:
             "finish": self.finish_time,
             "jct": (None if self.finish_time is None
                     else self.finish_time - self.arrival),
-            "final_loss": (self.trainer.metrics_log[-1]["loss"]
-                           if self.trainer is not None
-                           and getattr(self.trainer, "metrics_log", None)
-                           else None),
+            "final_loss": self.last_loss,
+            "final_step": self.last_step,
             "migrations": self.n_migrations,
+            "preemptions": self.n_preemptions,
         }

@@ -8,11 +8,15 @@ discrete-event simulator (repro.sched.base). This module supplies
     are tiny because a smoke mini-batch is ~0.1 s);
   * ``plan_actions(jobs, alloc, n_gpus)`` — the diff from a target
     allocation map to concrete elastic actions against live jobs. Shrinks
-    sort first so their freed devices fund the grows/starts.
+    (including preemptions) sort first so their freed devices fund the
+    grows/starts.
 
-Full preemption of a RUNNING job (target 0) is clamped to one slice: a live
-ElasticTrainer cannot stop without checkpoint-based preemption (ROADMAP
-follow-on); the clamp is recorded on the action for observability.
+A 0-GPU target for a RUNNING job is a full preemption: the executor
+checkpoint-stops the job (core.stop_resume), returns ALL of its devices to
+the pool, and parks it as re-admittable demand — Tiresias-style preemptive
+time-sharing executes for real instead of being clamped to one slice.
+A 0-GPU target for a job with no live trainer (pending or already
+preempted) simply leaves it parked.
 """
 from __future__ import annotations
 
@@ -25,31 +29,34 @@ from repro.sched.tiresias import Tiresias
 
 @dataclasses.dataclass(frozen=True)
 class Action:
-    kind: str           # "start" | "scale_out" | "scale_in"
+    kind: str           # "start" | "scale_out" | "scale_in" | "preempt"
     jid: int
-    target_p: int       # desired parallelism after the action
-    clamped: bool = False   # true when a 0-alloc preemption was clamped
+    target_p: int       # desired parallelism after the action (0 = preempt)
 
 
 def plan_actions(jobs: dict[int, object], alloc: dict[int, int],
                  n_gpus: int) -> list[Action]:
-    """Diff the policy's target allocation against live job state."""
+    """Diff the policy's target allocation against live job state.
+
+    ``start`` covers both first admission and re-admission of a preempted
+    job (the executor restores from the checkpoint handle when one exists).
+    Jobs absent from ``alloc`` — e.g. mid-checkpoint jobs the policy cannot
+    see — are left untouched."""
     shrinks, grows = [], []
     for jid, target in alloc.items():
         job = jobs.get(jid)
         if job is None or job.finish_time is not None:
             continue
-        cur = job.alloc
         target = job.feasible_p(min(target, n_gpus))
         if job.trainer is None:
             if target > 0:
                 grows.append(Action("start", jid, target))
             continue
-        clamped = target == 0
-        if clamped:
-            target = 1          # live preemption floor (see module docstring)
-        if target < cur:
-            shrinks.append(Action("scale_in", jid, target, clamped))
+        cur = job.alloc
+        if target == 0:
+            shrinks.append(Action("preempt", jid, 0))
+        elif target < cur:
+            shrinks.append(Action("scale_in", jid, target))
         elif target > cur:
             grows.append(Action("scale_out", jid, target))
     return shrinks + grows

@@ -4,8 +4,10 @@ from repro.core.elastic_runtime import ElasticTrainer
 from repro.core.election import LeaderElection
 from repro.core.membership import Membership, StragglerDetector
 from repro.core.scaling import Busy, ScalingController, ScalingRecord
-from repro.core.stop_resume import stop_resume_rescale
+from repro.core.stop_resume import checkpoint_save, checkpoint_stop, \
+    resume_from_checkpoint, stop_resume_rescale, teardown_trainer
 
 __all__ = ["EDLJob", "CoordinationStore", "ElasticTrainer", "LeaderElection",
            "Membership", "StragglerDetector", "Busy", "ScalingController",
-           "ScalingRecord", "stop_resume_rescale"]
+           "ScalingRecord", "stop_resume_rescale", "checkpoint_save",
+           "checkpoint_stop", "resume_from_checkpoint", "teardown_trainer"]

@@ -53,6 +53,42 @@ class ExecHandle:
 
 
 class ElasticTrainer:
+    """One elastic training job: a synchronous data-parallel trainer whose
+    parallelism can be changed stop-free while it runs.
+
+    Public control surface (all scaling entry points raise ``Busy`` — the
+    paper's RETRY — while another operation is in flight, and commit at the
+    next mini-batch boundary after their background context prep lands):
+
+      step()                 — one synchronous mini-batch on the current
+                               topology; also the commit point for any
+                               scheduled switch (``notify_batch_end``).
+      scale_out/scale_in     — resize within the devices the job already
+                               owns (victims exit gracefully, returning
+                               their data-partition remainders).
+      migrate()              — fused scale-in + scale-out at constant p,
+                               one topology switch (straggler mitigation).
+      grant_devices(devs)    — a scheduler HANDS the job extra devices; the
+                               job owns them immediately and scales out onto
+                               them stop-free. A grant beyond the job's
+                               requested parallelism is a transient-resource
+                               loan the scheduler may reclaim at any time.
+      release_devices(n)     — graceful scale-in that RETURNS device
+                               ownership: the freed devices leave
+                               ``self.devices`` when the switch commits and
+                               are handed to ``on_devices_released`` (the
+                               reclaim side of a loan, or any scheduler
+                               shrink).
+
+    Full preemption (checkpoint-stop to disk and later re-admission on a
+    different device set) is layered on top by ``core.stop_resume``:
+    ``checkpoint_stop`` is the one-call synchronous entry point
+    (``checkpoint_save`` + ``teardown_trainer``, which the cluster
+    executor's DiskCheckpointer drives separately so the save can run in
+    the background), and ``resume_from_checkpoint`` restores into a fresh
+    trainer — the trainer itself always runs at p >= 1.
+    """
+
     def __init__(self, cfg, *, global_batch: int, seq_len: int,
                  init_parallelism: int, model_parallel: int = 1,
                  optimizer: Optimizer | None = None,

@@ -1,8 +1,20 @@
-"""Stop-resume baseline (the approach EDL replaces, §2.2).
+"""Checkpoint-stop / resume-from-disk entry points, and the stop-resume
+rescale baseline (the approach EDL replaces, §2.2).
 
-Checkpoint the job, tear everything down (state, executables, compilation
-cache), rebuild at the new parallelism from scratch, restore, resume. ALL
-workers are stopped for the whole duration — the paper's Table-2 comparison.
+Two consumers share the primitives in this module:
+
+  * ``stop_resume_rescale`` — the paper's Table-2 baseline: checkpoint, tear
+    EVERYTHING down (state, executables, compilation cache), rebuild at the
+    new parallelism from scratch, restore, resume. All workers are stopped
+    for the whole duration.
+  * the cluster executor's full preemption path (repro.cluster.executor):
+    ``checkpoint_save`` + ``teardown_trainer`` stop a RUNNING job to disk
+    mid-run and return all of its devices to the shared pool;
+    ``resume_from_checkpoint`` re-admits it later onto a freshly built
+    trainer — possibly on a different device set and at a different
+    parallelism — restoring optimizer/model state, the dynamic-data-pipeline
+    permutation (in-flight partition remainders included), and the step /
+    sample counters so training continues exactly where it stopped.
 """
 from __future__ import annotations
 
@@ -10,10 +22,77 @@ import tempfile
 import time
 
 import jax
-import numpy as np
 
 from repro.checkpoint import load_checkpoint, save_checkpoint
-from repro.core.scaling import ScalingRecord
+from repro.core.scaling import Busy, Phase, ScalingRecord
+
+
+def checkpoint_save(trainer, checkpoint_dir: str) -> None:
+    """Write ``trainer``'s full restorable state to ``checkpoint_dir``:
+    train state (params + optimizer moments), step / sample counters, and
+    the dynamic data pipeline's ``state_dict`` — whose serialization folds
+    every in-flight partition assignment back into the returned-work queue
+    (replayed from the last reported offset), so a restore resumes
+    exactly-once data consumption no matter how many workers were mid-read.
+
+    Read-only with respect to the trainer: safe to run from a background
+    thread while the job is parked (not stepping)."""
+    save_checkpoint(
+        checkpoint_dir, trainer.state, step=trainer.step_idx,
+        pipeline_state=trainer.pipeline.state_dict(),
+        extra={"samples_seen": trainer.samples_seen, "p": trainer.p,
+               "job_handle": trainer.job_handle})
+
+
+def teardown_trainer(trainer) -> list:
+    """Release everything a stopped job holds: drop the train state, the
+    live executable, and the per-topology compiled-executable cache, and
+    return the job's whole device pool to the caller. Does NOT touch the
+    process-global jax caches — other tenants in the same process keep
+    their compiled executables."""
+    devices, trainer.devices = list(trainer.devices), []
+    trainer.state = None
+    trainer.exec = None
+    trainer._exec_cache.clear()
+    return devices
+
+
+def checkpoint_stop(trainer, checkpoint_dir: str) -> list:
+    """Stop a RUNNING job to disk mid-run: checkpoint, then tear down.
+    Returns the devices the job owned. Raises ``Busy`` (the paper's RETRY)
+    while a scaling operation is in flight — a checkpoint taken mid-switch
+    would capture a topology that no longer exists at restore time."""
+    if trainer.controller.phase is not Phase.IDLE:
+        raise Busy("scaling in flight; checkpoint-stop after it commits")
+    checkpoint_save(trainer, checkpoint_dir)
+    return teardown_trainer(trainer)
+
+
+def resume_from_checkpoint(trainer, checkpoint_dir: str) -> dict:
+    """Restore a checkpoint into a freshly built trainer (any device set,
+    any feasible parallelism). The trainer's execution context
+    (``trainer.exec``) must already target the NEW topology; the restored
+    arrays are resharded onto it by ``device_put``. Restores the data
+    pipeline's permutation + progress and the step / sample counters, and
+    invalidates the worker iterators' local buffers so the first post-resume
+    draw fetches fresh assignments from the restored pipeline."""
+    from repro.training.step import init_train_state
+    with trainer.exec.mesh:
+        template = init_train_state(trainer.cfg, trainer.optimizer,
+                                    jax.random.PRNGKey(0))
+    restored, meta = load_checkpoint(checkpoint_dir,
+                                     like=jax.device_get(template))
+    trainer.state = jax.device_put(restored, trainer.exec.state_shardings)
+    jax.block_until_ready(jax.tree.leaves(trainer.state)[0])
+    trainer.pipeline.load_state_dict(meta["pipeline"])
+    for it in trainer.iters.values():
+        it.assignment = None
+        it._buf = None
+    trainer.step_idx = int(meta.get("step", 0))
+    extra = meta.get("extra") or {}
+    trainer.samples_seen = int(extra.get("samples_seen",
+                                         trainer.samples_seen))
+    return meta
 
 
 def stop_resume_rescale(trainer, target_p: int,
@@ -21,7 +100,6 @@ def stop_resume_rescale(trainer, target_p: int,
                         ) -> ScalingRecord:
     """Adjust ``trainer`` to ``target_p`` the stop-resume way. Training is
     fully stopped from t_request to t_switch_end (stop_time == e2e_time)."""
-    from repro.core.scaling import Busy
     if trainer.controller.plan is not None:
         raise Busy("scaling already in flight; retry")   # paper: RETRY
     rec = ScalingRecord("stop_resume", trainer.p, target_p,
@@ -30,10 +108,11 @@ def stop_resume_rescale(trainer, target_p: int,
     ckpt = checkpoint_dir or tempfile.mkdtemp(prefix="edl_sr_")
 
     # 1. checkpoint and stop
-    save_checkpoint(ckpt, trainer.state, step=trainer.step_idx,
-                    pipeline_state=trainer.pipeline.state_dict())
+    checkpoint_save(trainer, ckpt)
     # 2. tear down: drop state, executables, compilation cache — a restarted
-    #    process pays context preparation from zero.
+    #    process pays context preparation from zero. Unlike preemption
+    #    teardown, the baseline also clears the global jax caches to model a
+    #    full process restart.
     trainer.state = None
     trainer.exec = None
     trainer._exec_cache.clear()
@@ -47,20 +126,10 @@ def stop_resume_rescale(trainer, target_p: int,
     handle = trainer._build_exec(target_p)
     rec.t_prep_end = time.monotonic()
 
-    # 4. restore model + pipeline state
+    # 4. restore model + pipeline state onto the rebuilt topology
     rec.t_switch_start = rec.t_prep_end
-    from repro.training.step import init_train_state
-    with handle.mesh:
-        template = init_train_state(trainer.cfg, trainer.optimizer,
-                                    jax.random.PRNGKey(0))
-    restored, meta = load_checkpoint(ckpt, like=jax.device_get(template))
-    trainer.state = jax.device_put(restored, handle.state_shardings)
-    jax.block_until_ready(jax.tree.leaves(trainer.state)[0])
-    trainer.pipeline.load_state_dict(meta["pipeline"])
-    for it in trainer.iters.values():
-        it.assignment = None
-        it._buf = None
     trainer.exec = handle
+    resume_from_checkpoint(trainer, ckpt)
     trainer.p = target_p
     rec.t_switch_end = time.monotonic()
     # stop-resume stops everything: stop time is the whole window

@@ -21,11 +21,18 @@ if "--xla_force_host_platform_device_count" not in \
 """Multi-tenant cluster driver (end-to-end example + integration target).
 
 Runs N concurrent elastic jobs on a shared device pool under a pluggable
-scheduling policy, reporting per-job JCTs, all scaling events, and the
+scheduling policy, reporting per-job JCTs, all scaling events (including
+checkpoint-stop preemptions and re-admissions), and the
 device-conservation verdict as JSON.
 
   PYTHONPATH=src python -m repro.launch.cluster --devices 4 \
       --policy throughput --jobs "a=vgg19:3:25@0,b=resnet50:1:30@0"
+
+  # Tiresias-style preemptive time-sharing: a higher-priority arrival
+  # checkpoint-stops the running tenant to disk and re-admits it later
+  PYTHONPATH=src python -m repro.launch.cluster --devices 4 \
+      --policy tiresias --quanta 0.1,1000 \
+      --jobs "a=resnet50:2:20@0,b=vgg19:4:12@6"
 
 Job grammar: ``name=profile:requested_p:total_steps@arrival`` where
 ``profile`` names an analytic scaling profile (sched.throughput.PROFILES)
@@ -58,6 +65,10 @@ def main(argv=None):
     ap.add_argument("--policy", default="throughput",
                     choices=["tiresias", "elastic-tiresias", "throughput",
                              "static"])
+    ap.add_argument("--quanta", default=None,
+                    help="comma-separated Tiresias service quanta in "
+                         "attained GPU-seconds, e.g. '0.1,1000' (Tiresias "
+                         "policies only)")
     ap.add_argument("--devices", type=int, default=_N_DEV)
     ap.add_argument("--batch", type=int, default=12)
     ap.add_argument("--seq", type=int, default=64)
@@ -73,11 +84,16 @@ def main(argv=None):
     specs = parse_jobs(args.jobs, batch=args.batch, seq=args.seq,
                        n_samples=args.n_samples,
                        d_partitions=args.d_partitions)
-    policy = make_policy(args.policy)
+    policy_kw = {}
+    if args.quanta and args.policy in ("tiresias", "elastic-tiresias"):
+        policy_kw["quanta"] = tuple(
+            float(q) for q in args.quanta.split(","))
+    policy = make_policy(args.policy, **policy_kw)
     t0 = time.monotonic()
     ex = ClusterExecutor(specs, policy, resched_every=args.resched_every)
     stats = ex.run(max_rounds=args.max_rounds)
     stats["wall_s"] = round(time.monotonic() - t0, 2)
+    ex.close()      # drop parked-job checkpoint state (unreachable now)
 
     if args.json:
         print(json.dumps(stats))
@@ -99,7 +115,9 @@ def main(argv=None):
         print(f"  round {e['round']:3d}  {e['op']:>9s}  {e['job']:>8s}  "
               f"p {e['from_p']} -> {e['to_p']}{loan}")
     print(f"device conservation: {'OK' if stats['conserved'] else 'LEAK'}; "
-          f"max transient loan: {stats['max_loaned']} device(s)")
+          f"max transient loan: {stats['max_loaned']} device(s); "
+          f"preemptions: {stats['preemptions']} "
+          f"(re-admitted {stats['readmissions']})")
     return 0
 
 

@@ -20,6 +20,14 @@ feeds back through profiling as a follow-on).
 Both ``repro.sched.simulator.Job`` and ``repro.cluster.job.ClusterJob``
 satisfy this, so Tiresias / Elastic-Tiresias / MaxThroughput / StaticPolicy
 drive simulated ticks and real ElasticTrainers unchanged.
+
+Allocation semantics: a target of 0 for a RUNNING job is a full preemption.
+The live executor checkpoint-stops the job (all of its devices return to
+the pool) and parks it; parked jobs re-appear in ``view.pending`` with
+their attained service and original arrival intact, so policies treat them
+as re-admittable demand exactly like never-started arrivals. Policies never
+see a job whose checkpoint save is still in flight — its devices are not
+reclaimable until the save lands.
 """
 from __future__ import annotations
 

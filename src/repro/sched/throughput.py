@@ -73,6 +73,10 @@ class MaxThroughput:
     (inelastic jobs: exactly ``requested_p`` or nothing) — then every
     remaining GPU goes to the elastic job with the largest marginal
     throughput gain, while that gain exceeds ``min_gain`` samples/s.
+    Alive includes preempted-and-parked jobs (they sit in ``view.pending``),
+    so a checkpointed tenant re-enters through the same admission floor as
+    a fresh arrival; a floor that no longer fits emits 0 — a real
+    checkpoint-stop preemption on the live executor.
 
     Grants above a job's requested parallelism are transient-resource
     loans: the next rebalance reclaims them automatically as soon as a

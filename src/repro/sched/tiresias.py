@@ -2,7 +2,11 @@
 
 Tiresias: discretized two-dimensional attained service (priority groups
 G0..Gk with service quanta); shortest-job-first-like, preemptive, starvation
-guard. Jobs run at their requested parallelism or wait.
+guard. Jobs run at their requested parallelism or wait. A running job that
+loses its GPUs to a higher-priority arrival gets a 0 target — on the live
+executor that is a real checkpoint-stop preemption (demotion to the queue),
+not a clamp; the parked job keeps its attained service and is re-admitted
+from the saved state once it wins GPUs again.
 
 Elastic-Tiresias adds two rules:
   R1 Compaction — when > N jobs wait, scale running jobs in (never below
@@ -40,7 +44,11 @@ class Tiresias:
         return len(self.quanta)
 
     def _priority_key(self, view, job):
-        starved = (job.start_time is None and
+        # the guard covers every job currently WITHOUT GPUs: never-started
+        # arrivals and preempted-parked jobs alike — a demoted job evicted
+        # by a stream of fresh G0 arrivals must eventually be promoted, or
+        # full preemption would let it starve on disk forever
+        starved = (job.alloc == 0 and
                    view.now - job.arrival > self.starvation_s)
         return (0 if starved else self.group_of(job), job.arrival)
 

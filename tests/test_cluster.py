@@ -1,11 +1,15 @@
 """Multi-tenant cluster executor: policy-driven device transfers between
 LIVE jobs (one job's scale-in funding another's scale-out), transient
-loans, straggler-triggered migration, and device conservation.
+loans, checkpoint-based full preemption + re-admission, straggler-triggered
+migration, and device conservation (including while a preemption checkpoint
+is in flight).
 
-Fast tests drive the full executor loop with a FakeTrainer implementing the
-ElasticTrainer hand-off interface (no jax, deterministic). The slow tests
-run the real driver (repro.launch.cluster) in a subprocess on a forced
-multi-device host platform, under BOTH Tiresias and throughput policies.
+Fast tests drive the full executor loop with a FakeTrainer + FakeCheckpointer
+implementing the ElasticTrainer hand-off / checkpointer protocols (no jax,
+deterministic). The slow tests run the real driver (repro.launch.cluster) in
+a subprocess on a forced multi-device host platform, under Tiresias and
+throughput policies — including a real checkpoint-stop preemption to disk
+and re-admission on a different device set.
 """
 import json
 import os
@@ -15,7 +19,7 @@ import sys
 import pytest
 
 from repro.cluster.executor import ClusterExecutor
-from repro.cluster.job import ClusterJob, JobSpec
+from repro.cluster.job import ClusterJob, JobSpec, JobState
 from repro.cluster.policy import make_policy, plan_actions
 from repro.core.scaling import Phase
 from repro.sched.throughput import MaxThroughput, step_time
@@ -70,10 +74,51 @@ class FakeTrainer:
         self._flagged_stragglers = []
 
 
-def run_fake_cluster(specs, policy, *, rounds=40, resched_every=2):
+class FakeCheckpointer:
+    """Executor checkpointer-protocol double: snapshots the fake trainer's
+    step counter in memory. Set ``hold = True`` to keep a save in flight so
+    tests can observe CHECKPOINTING device accounting across rounds."""
+
+    def __init__(self):
+        self.hold = False
+        self.saved: dict[int, int] = {}
+
+    def begin(self, job):
+        self.saved[job.jid] = job.trainer.step_count
+        job.checkpoint = ("fake-ckpt", job.jid)
+
+    def done(self, job):
+        return not self.hold
+
+    def teardown(self, job):
+        freed, job.trainer.devices = list(job.trainer.devices), []
+        return freed
+
+    def restore(self, job, trainer):
+        trainer.step_count = self.saved[job.jid]
+
+
+class ScriptedPolicy:
+    """Deterministic allocation script {round: {jid: p}}; between scripted
+    rounds the most recent entry keeps applying (before the first entry,
+    keep-current)."""
+
+    def __init__(self, script):
+        self.script = dict(script)
+
+    def __call__(self, view):
+        past = [r for r in self.script if r <= view.now]
+        if past:
+            return self.script[max(past)]
+        return {j.jid: j.alloc for j in view.running.values()}
+
+
+def run_fake_cluster(specs, policy, *, rounds=40, resched_every=2,
+                     checkpointer=None):
     ex = ClusterExecutor(specs, policy, devices=list(range(4)),
                          resched_every=resched_every,
-                         trainer_factory=FakeTrainer)
+                         trainer_factory=FakeTrainer,
+                         checkpointer=checkpointer or FakeCheckpointer())
     stats = ex.run(max_rounds=rounds)
     return ex, stats
 
@@ -119,29 +164,32 @@ def test_throughput_loan_reclaimed_on_demand():
 
 
 # -------------------------------------------------- funding under Tiresias
-def test_tiresias_compaction_funds_queued_job():
-    """Elastic-Tiresias R1: a queued arrival triggers compaction —
-    running jobs past the first service quantum shrink (scale_in) and the
-    freed devices fund the newcomer's admission (scale_out from 0)."""
+def test_tiresias_compaction_preempts_and_funds_queued_job():
+    """Elastic-Tiresias R1: a queued arrival triggers compaction — the
+    lowest-priority donor whose floor cannot be met is preempted outright
+    (checkpoint-stop to 0 GPUs, no clamp), another donor shrinks to its QoS
+    floor, and the freed devices fund the newcomer's admission."""
     specs = [JobSpec("a", 2, 60, profile="vgg19"),
              JobSpec("b", 2, 60, profile="resnet50"),
              JobSpec("c", 2, 30, profile="googlenet", arrival=6.0)]
     pol = make_policy("elastic-tiresias", quanta=(1.0, 50.0))
     ex, stats = run_fake_cluster(specs, pol, rounds=16)
-    shrinks = [e for e in stats["events"] if e["op"] == "scale_in"
-               and e["job"] in ("a", "b")]
-    assert len(shrinks) >= 2, "both donors shrink to their QoS floor"
-    assert all(e["to_p"] == 1 for e in shrinks)
+    pre = _find(stats["events"], "preempt", "b")
+    assert pre and pre[0]["to_p"] == 0, "donor b is FULLY preempted"
+    shr = _find(stats["events"], "scale_in", "a")
+    assert shr and shr[0]["to_p"] == 1, "donor a shrinks to its QoS floor"
     c_start = _find(stats["events"], "scale_out", "c")
     assert c_start and c_start[0]["to_p"] == 2
-    assert stats["events"].index(shrinks[0]) < \
-        stats["events"].index(c_start[0])
+    assert stats["events"].index(pre[0]) < stats["events"].index(c_start[0]), \
+        "the preemption must fund (precede) the admission"
     assert stats["conserved"]
 
 
 def test_tiresias_expansion_regrows_after_finish():
     """Elastic-Tiresias R2: when the short job finishes, its devices are
-    granted back to the running jobs (expansion while gain positive)."""
+    granted back to the running jobs (expansion while gain positive); a
+    donor preempted during compaction is re-admitted from its checkpoint
+    along the way."""
     specs = [JobSpec("a", 2, 60, profile="vgg19"),
              JobSpec("b", 2, 60, profile="resnet50"),
              JobSpec("c", 2, 6, profile="googlenet", arrival=6.0)]
@@ -152,6 +200,12 @@ def test_tiresias_expansion_regrows_after_finish():
     regrow = [e for e in stats["events"] if e["op"] == "scale_out"
               and e["from_p"] > 0 and e["round"] > fin[0]["round"]]
     assert regrow, "freed devices must be re-granted to running jobs"
+    assert _find(stats["events"], "preempt", "b"), \
+        "compaction fully preempts the donor below its floor"
+    b_re = _find(stats["events"], "readmit", "b")
+    assert b_re, "the preempted donor is re-admitted from its checkpoint"
+    assert ex.jobs[1].summary()["final_step"] == ex.jobs[1].steps_done, \
+        "step-count continuity across b's preempt -> re-admit round trip"
     assert stats["conserved"]
 
 
@@ -169,8 +223,88 @@ def test_straggler_flag_triggers_migration():
     assert ex.jobs[0].trainer._flagged_stragglers == []
 
 
+# ----------------------------------------------- preemption & re-admission
+def test_forced_preempt_readmit_continuity_and_device_set():
+    """A scripted 0-GPU round checkpoint-stops the job and returns ALL of
+    its devices; re-admission lands on a DIFFERENT device set and training
+    continues from the saved step count (no reset, no lost steps)."""
+    pol = ScriptedPolicy({2: {0: 0}, 4: {0: 2}})
+    ex = ClusterExecutor([JobSpec("a", 2, 12)], pol,
+                         devices=list(range(4)), resched_every=2,
+                         trainer_factory=FakeTrainer,
+                         checkpointer=FakeCheckpointer())
+    stats = ex.run(max_rounds=40)
+    pre = _find(stats["events"], "preempt", "a")
+    re_ = _find(stats["events"], "readmit", "a")
+    assert pre and pre[0]["to_p"] == 0
+    assert re_ and re_[0]["to_p"] == 2
+    assert set(pre[0]["devices"]) == {0, 1}
+    assert set(re_[0]["devices"]) == {2, 3}, \
+        "re-admission restores onto a different device set"
+    job = ex.jobs[0]
+    assert job.state is JobState.FINISHED and job.steps_done == 12
+    assert job.summary()["final_step"] == 12, \
+        "trainer step count continues across the checkpoint round trip"
+    steps = [m["step"] for m in job.trainer.metrics_log]
+    assert steps == list(range(steps[0], steps[0] + len(steps))), \
+        "strictly consecutive steps after restore (no reset, no skip)"
+    assert stats["preemptions"] == 1 and stats["readmissions"] == 1
+    assert stats["conserved"]
+
+
+def test_device_conservation_while_checkpoint_in_flight():
+    """While a preemption checkpoint save is in flight the job still OWNS
+    its devices: they are neither free nor grantable, and the per-round
+    conservation assert accounts them to the CHECKPOINTING job."""
+    ck = FakeCheckpointer()
+    ck.hold = True
+    pol = ScriptedPolicy({2: {0: 0, 1: 4}})
+    ex = ClusterExecutor([JobSpec("a", 2, 40), JobSpec("b", 2, 40)], pol,
+                         devices=list(range(4)), resched_every=2,
+                         trainer_factory=FakeTrainer, checkpointer=ck)
+    ex.run(max_rounds=6)        # preemption begins at round 2; save held
+    job = ex.jobs[0]
+    assert job.state is JobState.CHECKPOINTING
+    assert job.jid in ex.checkpointing
+    assert job.alloc == 2, "devices stay with the job until the save lands"
+    assert len(ex.free) == 0, "held devices are not grantable"
+    assert ex.jobs[1].alloc == 2, "b's pending grant cannot be satisfied yet"
+    ex._assert_conserved()
+    ck.hold = False             # the save lands
+    stats = ex.run(max_rounds=20)
+    assert ex.jobs[0].state is JobState.PREEMPTED
+    assert ex.jobs[0] in ex.pending, "parked jobs are re-admittable demand"
+    assert ex.jobs[1].alloc == 4, "the landed checkpoint funds b's grant"
+    assert _find(stats["events"], "preempt", "a")
+    assert stats["conserved"]
+
+
+def test_tiresias_demotion_preempts_and_readmits_both_ways():
+    """Plain (non-elastic) Tiresias preemptive time-sharing for real: the
+    fresh G0 arrival preempts the demoted running job wholesale; once the
+    newcomer demotes too, the older job wins its GPUs back — each job is
+    re-admitted from its checkpoint and both run to completion."""
+    specs = [JobSpec("a", 2, 20, profile="resnet50"),
+             JobSpec("b", 4, 12, profile="vgg19", arrival=4.0)]
+    pol = make_policy("tiresias", quanta=(0.5, 100.0))
+    ex, stats = run_fake_cluster(specs, pol, rounds=80)
+    assert stats["finished"] == 2, stats["jobs"]
+    for name in ("a", "b"):
+        assert _find(stats["events"], "preempt", name), name
+        assert _find(stats["events"], "readmit", name), name
+    a_pre = _find(stats["events"], "preempt", "a")[0]
+    a_re = _find(stats["events"], "readmit", "a")[0]
+    assert set(a_re["devices"]) != set(a_pre["devices"]), \
+        "a re-admits on the devices its preemptor vacated"
+    assert ex.jobs[0].steps_done == 20 and ex.jobs[1].steps_done == 12
+    assert ex.jobs[0].summary()["final_step"] == 20
+    assert ex.jobs[1].summary()["final_step"] == 12
+    assert stats["preemptions"] >= 2 and stats["readmissions"] >= 2
+    assert stats["conserved"]
+
+
 # ------------------------------------------------------- plan_actions unit
-def test_plan_actions_shrinks_first_and_clamps_preemption():
+def test_plan_actions_preempts_first_and_funds_grows():
     a, b, c = (ClusterJob(i, JobSpec(n, 2, 10, global_batch=12))
                for i, n in enumerate("abc"))
     a.trainer = FakeTrainer(a.spec, [0, 1, 2])     # running at 3
@@ -178,10 +312,101 @@ def test_plan_actions_shrinks_first_and_clamps_preemption():
     jobs = {0: a, 1: b, 2: c}
     acts = plan_actions(jobs, {0: 0, 1: 2, 2: 1}, 4)
     kinds = [(x.kind, x.jid) for x in acts]
-    assert kinds[0] == ("scale_in", 0), "shrinks come first (they fund)"
-    assert acts[0].target_p == 1 and acts[0].clamped, \
-        "live preemption to 0 clamps to one slice"
+    assert kinds[0] == ("preempt", 0), "preemptions come first (they fund)"
+    assert acts[0].target_p == 0, "a 0-GPU target is a FULL preemption"
     assert ("scale_out", 1) in kinds and ("start", 2) in kinds
+
+
+def test_plan_actions_leaves_parked_jobs_parked():
+    """A 0 target for a job with no live trainer (pending or preempted) is
+    a no-op, not an action."""
+    j = ClusterJob(0, JobSpec("a", 2, 10))
+    assert plan_actions({0: j}, {0: 0}, 4) == []
+
+
+def test_tiresias_starvation_guard_promotes_parked_job():
+    """A preempted job that loses every round to a stream of fresh G0
+    arrivals is eventually promoted by the starvation guard and
+    re-admitted — full preemption must not let parked jobs starve on disk
+    forever (pre-preemption the guard only covered never-started jobs)."""
+    specs = [JobSpec("a", 2, 40, profile="resnet50"),
+             JobSpec("c1", 4, 6, profile="googlenet", arrival=8.0),
+             JobSpec("c2", 4, 6, profile="googlenet", arrival=14.0),
+             JobSpec("c3", 4, 6, profile="googlenet", arrival=20.0)]
+    pol = make_policy("tiresias", quanta=(0.5, 2.0), starvation_s=15.0)
+    ex, stats = run_fake_cluster(specs, pol, rounds=100)
+    pre = _find(stats["events"], "preempt", "a")
+    re_ = _find(stats["events"], "readmit", "a")
+    assert pre, "the fresh G0 arrival preempts demoted a"
+    assert re_, "parked a must come back via the starvation guard"
+    assert re_[0]["round"] >= 16, \
+        "promotion fires only once the starvation threshold passes"
+    assert ex.jobs[0].state is JobState.FINISHED
+    assert stats["conserved"]
+
+
+def test_revoked_start_want_does_not_launch_later():
+    """A start-want the policy later revokes with an explicit 0 target must
+    NOT launch once devices free up — the stale want would override the
+    policy's current decision."""
+    pol = ScriptedPolicy({2: {0: 2, 1: 2},     # b wanted, but no free devs
+                          4: {0: 2, 1: 0},     # ...and revoked before any
+                          6: {0: 0, 1: 0}})    # a's preemption frees devs
+    ex = ClusterExecutor([JobSpec("a", 2, 40), JobSpec("b", 2, 40)], pol,
+                         devices=list(range(2)), resched_every=2,
+                         trainer_factory=FakeTrainer,
+                         checkpointer=FakeCheckpointer())
+    ex.run(max_rounds=10)
+    assert ex.jobs[0].state is JobState.PREEMPTED
+    assert ex.jobs[1].trainer is None, \
+        "b's revoked want must not admit it against the 0 target"
+    assert len(ex.free) == 2
+    ex._assert_conserved()
+
+
+def test_close_discards_unreachable_checkpoints(tmp_path):
+    """close() drops parked-job checkpoint dirs — their handles live only
+    in this process, so nothing can re-admit them after it exits."""
+    from repro.cluster.executor import DiskCheckpointer
+    ex = ClusterExecutor([JobSpec("a", 2, 40)], make_policy("static"),
+                         devices=list(range(2)), trainer_factory=FakeTrainer,
+                         checkpointer=DiskCheckpointer())
+    d = tmp_path / "ckpt"
+    d.mkdir()
+    (d / "state.npz").write_bytes(b"x")
+    ex.jobs[0].checkpoint = str(d)
+    ex.close()
+    assert ex.jobs[0].checkpoint is None and not d.exists()
+
+
+def test_checkpoint_stop_resume_real_trainer_continuity():
+    """core.stop_resume mid-run entry points on a REAL trainer: stop to
+    disk, tear down (devices returned), rebuild fresh, resume — step
+    counter, loss trajectory and data-pipeline progress all continue."""
+    import tempfile
+    from repro.cluster.executor import default_trainer_factory
+    from repro.core import Busy, checkpoint_stop, resume_from_checkpoint
+
+    import jax
+    spec = JobSpec("a", 1, 10, global_batch=4, n_samples=64, d_partitions=4)
+    t1 = default_trainer_factory(spec, jax.devices()[:1])
+    for _ in range(3):
+        t1.step()
+    samples_before = t1.samples_seen
+    with tempfile.TemporaryDirectory() as ckpt:
+        # Busy guard: a checkpoint mid-switch would capture a dying topology
+        t1.controller.admit("scale_out", 1, 1)
+        with pytest.raises(Busy):
+            checkpoint_stop(t1, ckpt)
+        t1.controller.abort()
+        devices = checkpoint_stop(t1, ckpt)
+        assert devices and t1.devices == [] and t1.state is None
+        t2 = default_trainer_factory(spec, devices)
+        resume_from_checkpoint(t2, ckpt)
+        assert t2.step_idx == 3 and t2.samples_seen == samples_before
+        m = t2.step()
+        assert m["step"] == 4, "step counter continues, no reset"
+        assert m["loss"] < 12.0 and m["loss"] == m["loss"], "finite loss"
 
 
 def test_partial_grant_lands_on_feasible_parallelism():
@@ -256,6 +481,39 @@ def test_live_cluster_throughput_policy_transfers_devices():
     assert s["max_loaned"] >= 1, "transient loan must occur"
     for j in s["jobs"]:     # all three trained for real
         assert j["final_loss"] is not None
+
+
+@pytest.mark.slow
+def test_live_cluster_preempts_to_checkpoint_and_readmits():
+    """Tiresias preemptive time-sharing on REAL trainers: the big G0
+    arrival checkpoint-stops the running tenant to disk (all devices
+    returned), and the parked tenant is later re-admitted on a different
+    device set with its step count / train state restored — per-round
+    device conservation holding throughout."""
+    s = run_cluster_driver(
+        "--policy", "tiresias", "--quanta", "0.1,1000",
+        "--jobs", "a=resnet50:2:20@0,b=vgg19:4:12@6",
+        timeout=1200)
+    assert s["conserved"] is True
+    assert s["finished"] == 2, s["jobs"]
+    a_pre = [e for e in s["events"]
+             if e["op"] == "preempt" and e["job"] == "a"]
+    a_re = [e for e in s["events"]
+            if e["op"] == "readmit" and e["job"] == "a"]
+    assert a_pre, "the 0-GPU target must checkpoint-stop the live job"
+    assert a_re, "the parked job must be re-admitted from its checkpoint"
+    assert s["events"].index(a_pre[0]) < s["events"].index(a_re[0])
+    assert a_pre[0]["to_p"] == 0 and len(a_pre[0]["devices"]) == 2, \
+        "preemption returns ALL devices, not all-but-one"
+    assert set(a_re[0]["devices"]) != set(a_pre[0]["devices"]), \
+        "re-admission restores onto a different device set"
+    for j in s["jobs"]:
+        want = {"a": 20, "b": 12}[j["name"]]
+        assert j["steps_done"] == want, j
+        assert j["final_step"] == want, \
+            "restored trainer continues its step count (state continuity)"
+        assert j["final_loss"] is not None
+    assert s["preemptions"] >= 1 and s["readmissions"] >= 1
 
 
 @pytest.mark.slow
