@@ -1,7 +1,7 @@
 # Tier-1 verification and common entry points (see ROADMAP.md).
 PY ?= python
 
-.PHONY: test test-fast docs-check cluster-demo bench-cluster
+.PHONY: test test-fast docs-check cluster-demo bench-cluster bench-smoke
 
 # the tier-1 command: full suite, fail fast
 test:
@@ -21,3 +21,14 @@ cluster-demo:
 
 bench-cluster:
 	PYTHONPATH=src $(PY) benchmarks/cluster_bench.py
+
+# tiny live config under BOTH throughput models (analytic priors vs live
+# measured curves); the same contract runs in the tier-1 suite as the
+# slow-marked test_bench_smoke_cluster_under_both_models
+bench-smoke:
+	PYTHONPATH=src $(PY) benchmarks/cluster_bench.py \
+	  --policies throughput --throughput-model analytic \
+	  --jobs "a=vgg19:2:6@0,b=resnet50:1:8@0" --max-rounds 150
+	PYTHONPATH=src $(PY) benchmarks/cluster_bench.py \
+	  --policies throughput --throughput-model measured \
+	  --jobs "a=vgg19:2:6@0,b=resnet50:1:8@0" --max-rounds 150

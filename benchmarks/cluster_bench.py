@@ -5,7 +5,15 @@ static / elastic-tiresias / throughput policies on a shared 4-device pool
 Reports mean JCT (scheduling rounds) and wall time per policy; derived
 field records the JCT reduction of the best elastic policy vs static.
 
+``--throughput-model`` picks what the policies schedule from — the static
+analytic t(p) curves or per-job measured curves fed by live step times
+(``--profile-sweeps`` additionally prefills them via EDL-profile scale-in
+sweeps on idle devices). ``--policies`` shrinks the sweep for smoke runs
+(``make bench-smoke`` runs one tiny policy under BOTH models).
+
   PYTHONPATH=src python benchmarks/cluster_bench.py
+  PYTHONPATH=src python benchmarks/cluster_bench.py \
+      --throughput-model measured --policies throughput
 """
 import argparse
 import os
@@ -21,20 +29,34 @@ def main():
     ap.add_argument("--devices", type=int, default=4)
     ap.add_argument("--jobs", default="a=vgg19:3:20@0,b=resnet50:1:25@0,"
                                       "c=googlenet:1:12@6")
+    ap.add_argument("--policies",
+                    default="static,elastic-tiresias,throughput",
+                    help="comma-separated policy subset to run")
+    ap.add_argument("--throughput-model", default="analytic",
+                    choices=["analytic", "measured"])
+    ap.add_argument("--profile-sweeps", action="store_true")
+    ap.add_argument("--max-rounds", type=int, default=300)
+    ap.add_argument("--compile-cache", default=None, metavar="DIR")
     args = ap.parse_args()
 
     os.environ.setdefault(
         "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.devices}")
     from repro.cluster import ClusterExecutor, make_policy
     from repro.launch.cluster import parse_jobs
+    from repro.sched.throughput import AnalyticModel, MeasuredModel
 
     results = {}
-    for name in ("static", "elastic-tiresias", "throughput"):
+    for name in args.policies.split(","):
         specs = parse_jobs(args.jobs, batch=12, seq=64, n_samples=1 << 10,
                            d_partitions=16)
+        model = (MeasuredModel() if args.throughput_model == "measured"
+                 else AnalyticModel())
         t0 = time.monotonic()
-        ex = ClusterExecutor(specs, make_policy(name))
-        stats = ex.run(max_rounds=300)
+        ex = ClusterExecutor(specs, make_policy(name),
+                             throughput_model=model,
+                             profile_sweeps=args.profile_sweeps,
+                             compile_cache=args.compile_cache)
+        stats = ex.run(max_rounds=args.max_rounds)
         ex.close()
         wall = time.monotonic() - t0
         jct = stats["mean_jct"]     # None when nothing finished in budget
@@ -44,19 +66,25 @@ def main():
                          "max_loaned": stats["max_loaned"],
                          "preemptions": stats["preemptions"],
                          "readmissions": stats["readmissions"],
+                         "profile_sweeps": stats["profile_sweeps"],
                          "events": len(stats["events"]),
                          "wall_s": round(wall, 2)}
-        emit(f"cluster_{name}", wall * 1e6,
+        emit(f"cluster_{name}_{args.throughput_model}", wall * 1e6,
              f"mean_jct={jct:.1f}_rounds" if jct is not None
              else "mean_jct=unfinished")
 
-    base = results["static"]["mean_jct"]
+    base = results.get("static", {}).get("mean_jct")
     elastic = [results[n]["mean_jct"]
                for n in ("elastic-tiresias", "throughput")
-               if results[n]["mean_jct"] is not None]
-    red = 1 - min(elastic) / base if base and elastic else 0.0
-    emit("cluster_elastic_vs_static", 0.0, f"jct_reduction={red:.1%}")
-    save("cluster", {"results": results, "jct_reduction": red})
+               if n in results and results[n]["mean_jct"] is not None]
+    # only meaningful when the static baseline AND an elastic policy ran
+    # (a --policies smoke subset must not fabricate a 0% comparison)
+    red = 1 - min(elastic) / base if base and elastic else None
+    if red is not None:
+        emit("cluster_elastic_vs_static", 0.0, f"jct_reduction={red:.1%}")
+    save(f"cluster_{args.throughput_model}",
+         {"throughput_model": args.throughput_model, "results": results,
+          "jct_reduction": red})
 
 
 if __name__ == "__main__":

@@ -13,8 +13,9 @@ from repro.core.profiling import profile
 def run(min_p: int = 1, max_p: int = 4, steps_per_p: int = 6):
     tr = make_trainer(max_p, batch=12)
     t0 = time.monotonic()
-    results = profile(tr, min_p, max_p, steps_per_p=steps_per_p)
+    table = profile(tr, min_p, max_p, steps_per_p=steps_per_p)
     edl_time = time.monotonic() - t0
+    assert tr.p == max_p, "profile() must restore the entry parallelism"
 
     # stop-resume profiling: a fresh job (full context prep) per parallelism
     t0 = time.monotonic()
@@ -24,11 +25,13 @@ def run(min_p: int = 1, max_p: int = 4, steps_per_p: int = 6):
         tr2.run(steps_per_p)
     sr_time = time.monotonic() - t0
 
+    import dataclasses
     emit("fig9a_profile_edl", edl_time * 1e6,
          f"edl/sr-time-ratio={edl_time / sr_time:.2f}")
     emit("fig9a_profile_stop_resume", sr_time * 1e6, "-")
     save("profiling", {"edl_s": edl_time, "sr_s": sr_time,
-                       "per_p": {str(k): v for k, v in results.items()}})
+                       "per_p": {str(p): dataclasses.asdict(pt)
+                                 for p, pt in table.items()}})
 
 
 if __name__ == "__main__":

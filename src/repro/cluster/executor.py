@@ -28,6 +28,15 @@ allocation map, which is diffed into real elastic actions:
   migrate — straggler-triggered (§5.2): workers flagged by the job's
             StragglerDetector are cycled out in one fused switch.
 
+Policies reason about t(p) through the executor's pluggable
+``throughput_model`` (sched.throughput): with the default AnalyticModel
+they schedule from the paper's static curves; with a MeasuredModel every
+mini-batch's measured step time becomes a free observation at the job's
+current parallelism, and the opt-in ``profile_sweeps`` mode additionally
+runs EDL §5.2 scale-in sweeps on transient idle devices to prefill whole
+curves — so allocation decisions follow what jobs really do, not what
+their profile name predicts.
+
 Device conservation — running jobs' pools, plus devices held by in-flight
 preemption checkpoints, plus the free pool equals the cluster size — is
 asserted after every round; devices move ownership only synchronously
@@ -43,6 +52,23 @@ import time
 from repro.cluster.job import ClusterJob, JobSpec, JobState
 from repro.cluster.policy import plan_actions
 from repro.core.scaling import Busy, Phase
+
+
+def enable_compile_cache(path: str) -> str:
+    """Opt-in persistent XLA compilation cache: repeated topologies skip
+    recompilation across rounds, runs, and processes — the first step
+    toward unserializing background context-preps on small hosts (the
+    in-process exec-handle cache only helps within one trainer's life;
+    this survives preempt/re-admit teardowns and whole reruns). Thresholds
+    drop to zero because smoke-scale step functions compile in well under
+    the default 1 s minimum."""
+    import os
+    import jax
+    os.makedirs(path, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", str(path))
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    return str(path)
 
 
 def default_trainer_factory(spec: JobSpec, devices: list):
@@ -148,10 +174,24 @@ class ClusterExecutor:
     def __init__(self, specs: list[JobSpec], policy, *, devices=None,
                  resched_every: int = 4, trainer_factory=None,
                  prep_yield_s: float = 0.15, serialize_prep: bool = True,
-                 checkpointer=None):
+                 checkpointer=None, throughput_model=None,
+                 profile_sweeps: bool = False, profile_steps: int = 3,
+                 compile_cache: str | None = None):
+        if compile_cache:
+            enable_compile_cache(compile_cache)
         if devices is None:
             import jax
             devices = jax.devices()
+        if throughput_model is None:
+            from repro.sched.throughput import AnalyticModel
+            throughput_model = AnalyticModel()
+        # the model policies consume via the view (sched.base); every
+        # mini-batch feeds it a free observation, and with profile_sweeps
+        # idle devices prefill whole curves via scale-in sweeps
+        self.throughput_model = throughput_model
+        self.profile_sweeps = profile_sweeps
+        self.profile_steps = profile_steps
+        self._profiled: set[int] = set()
         self.devices = list(devices)
         self.n_gpus = len(self.devices)
         self.free: list = list(self.devices)
@@ -179,11 +219,12 @@ class ClusterExecutor:
 
     # ------------------------------------------------------------- events
     def _event(self, op: str, job: ClusterJob, from_p: int, to_p: int,
-               devices=None):
+               devices=None, loaned: int | None = None):
         e = {
             "round": self.round, "op": op, "job": job.spec.name,
             "jid": job.jid, "from_p": from_p, "to_p": to_p,
-            "loaned": max(0, to_p - job.requested_p)}
+            "loaned": (max(0, to_p - job.requested_p)
+                       if loaned is None else loaned)}
         if devices is not None:
             e["devices"] = [getattr(d, "id", d) for d in devices]
         self.events.append(e)
@@ -349,6 +390,63 @@ class ClusterExecutor:
             if cur + take >= target:
                 del self._wants[jid]
 
+    # ----------------------------------------------------------- profiling
+    def _maybe_profile(self):
+        """Opt-in EDL §5.2: when devices sit idle, run ONE scale-in
+        profiling sweep (core.profiling.profile) on a not-yet-swept running
+        job, temporarily loaning it the idle devices, and feed the measured
+        curve into the throughput model. The sweep is synchronous and
+        blocking (opt-in for exactly that reason); its mini-batches are
+        real training work but do not count toward the job's total_steps —
+        profiling must not fast-forward the schedule. Only models that can
+        ``ingest`` sweep tables (MeasuredModel) are worth sweeping for."""
+        ingest = getattr(self.throughput_model, "ingest", None)
+        if ingest is None or not self.free:
+            return
+        if self.serialize_prep and self._prep_in_flight():
+            return      # a sweep compiles every topology it visits
+        from repro.core.profiling import profile
+        for jid in sorted(self.running,
+                          key=lambda i: (self.jobs[i].arrival, i)):
+            job = self.jobs[jid]
+            if jid in self._profiled or job.spec.inelastic:
+                continue    # inelastic tenants are NEVER resized, not
+                            # even transiently for a measurement
+            if job.remaining_steps <= 2 * self.profile_steps:
+                continue    # about to finish: a sweep would cost more
+                            # wall-clock than its curve could ever repay
+            trainer = job.trainer
+            if trainer.controller.phase is not Phase.IDLE:
+                continue
+            cur = job.alloc
+            max_p = job.feasible_p(min(cur + len(self.free), self.n_gpus))
+            if max_p <= cur:
+                continue    # too few idle devices to learn anything NEW
+                            # right now; retry when more free up
+            devs = [self.free.pop(0) for _ in range(max_p - cur)]
+            try:
+                trainer.grant_devices(devs)
+            except (Busy, ValueError):
+                self.free = devs + self.free
+                continue
+            trainer.wait_for_scaling()
+            try:
+                table = profile(trainer, cur, max_p,
+                                steps_per_p=self.profile_steps,
+                                release=True, restore_p=cur)
+            except (Busy, ValueError):
+                # a switch was still in flight mid-sweep (slow background
+                # compile): abort the sweep. The borrowed devices stay in
+                # the job's pool as a plain transient loan — conservation
+                # holds, and the next rebalance reclaims them via the
+                # normal scale-in path; the sweep retries a later round
+                continue
+            ingest(job, table)
+            self._profiled.add(jid)
+            self._event("profile", job, max_p, cur,
+                        loaned=max(0, max_p - job.requested_p))
+            break       # at most one sweep per round
+
     # ------------------------------------------------------------ stepping
     def _step_job(self, job: ClusterJob):
         trainer = job.trainer
@@ -358,6 +456,11 @@ class ClusterExecutor:
                 trainer._commit_switch()
             return
         job.on_step(m, self.now)
+        # free observation (EDL §5.2): every live mini-batch's measured
+        # step time at the job's CURRENT parallelism feeds the model the
+        # policies schedule from — a no-op on the analytic model
+        self.throughput_model.observe(
+            job, int(m.get("p", trainer.p)), m.get("step_time", 0.0))
         flagged = [w for w in getattr(trainer, "_flagged_stragglers", [])
                    if w in trainer.worker_ids]
         if flagged and trainer.controller.phase is Phase.IDLE \
@@ -413,6 +516,8 @@ class ClusterExecutor:
                 if self.round and self.round % self.resched_every == 0:
                     self._reschedule()
                 self._satisfy_wants()
+                if self.profile_sweeps:
+                    self._maybe_profile()
                 for job in list(self.running.values()):
                     self._step_job(job)
                 if not self.running and self.checkpointing:
@@ -480,8 +585,11 @@ class ClusterExecutor:
         jcts = [j.finish_time - j.arrival for j in self.finished]
         out = {
             "policy": type(self.policy).__name__,
+            "throughput_model": type(self.throughput_model).__name__,
             "n_gpus": self.n_gpus,
             "rounds": self.round,
+            "profile_sweeps": sum(1 for e in self.events
+                                  if e["op"] == "profile"),
             "finished": len(self.finished),
             "unfinished": len(self.jobs) - len(self.finished),
             "mean_jct": (sum(jcts) / len(jcts)) if jcts else None,

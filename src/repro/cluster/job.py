@@ -28,6 +28,19 @@ import dataclasses
 import enum
 
 
+def feasible_parallelism(global_batch: int, target: int) -> int:
+    """Largest parallelism <= target the live trainer can actually run at
+    (the global batch must divide evenly); 0 when target < 1. The ONE
+    implementation of the feasibility clamp — ClusterJob, workload spec
+    synthesis, and anything sizing grants all share it."""
+    if target < 1:
+        return 0
+    p = target
+    while global_batch % p:
+        p -= 1
+    return p
+
+
 class JobState(enum.Enum):
     PENDING = "pending"             # arrived, never launched
     RUNNING = "running"             # live trainer stepping
@@ -41,8 +54,9 @@ class JobSpec:
     """One tenant's elastic training job.
 
     ``profile`` names an analytic scaling profile in
-    repro.sched.throughput.PROFILES — it is what the scheduling policies
-    reason about (marginal gains, efficiency floors); the actual training
+    repro.sched.throughput.PROFILES — the *prior* the executor's
+    ThroughputModel starts from (a MeasuredModel overrides it per-job as
+    live observations and profiling sweeps land); the actual training
     workload is the (transformer) ``arch`` config.
     """
     name: str
@@ -137,15 +151,10 @@ class ClusterJob:
         self.n_preemptions += 1
 
     def feasible_p(self, target: int) -> int:
-        """Largest parallelism <= target the job can actually run at (the
-        global batch must divide evenly). 0 means full preemption: the
-        executor checkpoint-stops the job and re-admits it later."""
-        if target < 1:
-            return 0
-        q = target
-        while self.spec.global_batch % q:
-            q -= 1
-        return q
+        """Largest parallelism <= target the job can actually run at. 0
+        means full preemption: the executor checkpoint-stops the job and
+        re-admits it later."""
+        return feasible_parallelism(self.spec.global_batch, target)
 
     def on_step(self, metrics: dict, now: float):
         if self.start_time is None:

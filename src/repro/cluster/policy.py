@@ -22,8 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.sched.base import StaticPolicy
-from repro.sched.throughput import MaxThroughput
+from repro.sched.base import MaxThroughput, StaticPolicy
 from repro.sched.tiresias import Tiresias
 
 

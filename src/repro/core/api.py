@@ -36,10 +36,13 @@ class EDLJob:
 
     def profile(self, min_p: int | None = None, max_p: int | None = None,
                 **kw):
-        from repro.core.profiling import profile as _profile
+        """EDL profile(): a scale-in sweep returning a ProfileTable; with
+        no range, report the running job's current point only."""
+        from repro.core.profiling import ProfileTable, profile as _profile
         if min_p is None and max_p is None:     # running job: report current
-            return {self.trainer.p: {
-                "throughput": self.trainer.throughput()}}
+            return ProfileTable.from_throughputs(
+                {self.trainer.p: self.trainer.throughput()},
+                batch=getattr(self.trainer, "global_batch", None))
         return _profile(self.trainer, min_p, max_p, **kw)
 
     def migrate(self, n: int = 1):

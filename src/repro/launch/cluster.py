@@ -34,9 +34,21 @@ device-conservation verdict as JSON.
       --policy tiresias --quanta 0.1,1000 \
       --jobs "a=resnet50:2:20@0,b=vgg19:4:12@6"
 
+  # schedule from LIVE measured curves instead of the analytic priors,
+  # prefilled by profiling sweeps on idle devices (EDL §5.2)
+  PYTHONPATH=src python -m repro.launch.cluster --devices 4 \
+      --policy throughput --throughput-model measured --profile-sweeps
+
+  # Philly-like arrival trace synthesized onto live jobs
+  PYTHONPATH=src python -m repro.launch.cluster --devices 4 \
+      --workload "trace=philly seed=0 jobs=6 steps=4:10"
+
 Job grammar: ``name=profile:requested_p:total_steps@arrival`` where
-``profile`` names an analytic scaling profile (sched.throughput.PROFILES)
-and ``arrival`` is in scheduling rounds.
+``profile`` names an analytic scaling profile (sched.throughput.PROFILES —
+the ThroughputModel's prior) and ``arrival`` is in scheduling rounds.
+Alternatively ``--workload`` synthesizes the job list from
+sched.workload's trace generators (keys: trace=philly|synthetic, seed,
+jobs, steps=LO:HI).
 """
 import json
 import time
@@ -58,6 +70,34 @@ def parse_jobs(text: str, *, batch: int, seq: int, n_samples: int,
     return specs
 
 
+def parse_workload(text: str, *, devices: int, batch: int, seq: int,
+                   n_samples: int, d_partitions: int):
+    """``--workload "trace=philly seed=0 jobs=6 steps=4:10"`` — synthesize
+    live JobSpecs from the sched.workload trace generators (which
+    previously only fed the discrete-event simulator)."""
+    from repro.sched import workload
+    tokens = [item for item in text.replace(",", " ").split() if item]
+    bad = [t for t in tokens if "=" not in t]
+    if bad:
+        raise ValueError(f"--workload tokens must be key=value, got {bad}; "
+                         f"keys: trace, seed, jobs, steps")
+    kv = dict(t.split("=", 1) for t in tokens)
+    trace = kv.get("trace", "philly")
+    seed = int(kv.get("seed", 0))
+    n_jobs = int(kv.get("jobs", 6))
+    lo, _, hi = kv.get("steps", "4:20").partition(":")
+    steps = (int(lo), int(hi or lo))
+    if trace == "philly":
+        jobs = workload.philly_like(seed=seed, n_jobs=n_jobs)
+    elif trace == "synthetic":
+        jobs = workload.synthetic_16(seed=seed, n_jobs=n_jobs)
+    else:
+        raise ValueError(f"unknown trace {trace!r}; philly or synthetic")
+    return workload.to_cluster_specs(
+        jobs, devices=devices, batch=batch, steps=steps, seq_len=seq,
+        n_samples=n_samples, d_partitions=d_partitions)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--jobs", default="a=vgg19:3:25@0,b=resnet50:1:30@0,"
@@ -69,6 +109,23 @@ def main(argv=None):
                     help="comma-separated Tiresias service quanta in "
                          "attained GPU-seconds, e.g. '0.1,1000' (Tiresias "
                          "policies only)")
+    ap.add_argument("--workload", default=None,
+                    help="synthesize jobs from a sched.workload trace "
+                         "instead of --jobs, e.g. 'trace=philly seed=0 "
+                         "jobs=6 steps=4:10'")
+    ap.add_argument("--throughput-model", default="analytic",
+                    choices=["analytic", "measured"],
+                    help="what policies schedule from: the static analytic "
+                         "t(p) curves, or per-job measured curves fed by "
+                         "live step times (analytic prior fallback)")
+    ap.add_argument("--profile-sweeps", action="store_true",
+                    help="prefill measured curves by running EDL-profile "
+                         "scale-in sweeps on idle devices (measured model "
+                         "only)")
+    ap.add_argument("--compile-cache", default=None, metavar="DIR",
+                    help="persistent JAX compilation-cache directory: "
+                         "repeated topologies skip recompilation across "
+                         "rounds and runs")
     ap.add_argument("--devices", type=int, default=_N_DEV)
     ap.add_argument("--batch", type=int, default=12)
     ap.add_argument("--seq", type=int, default=64)
@@ -80,17 +137,29 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     from repro.cluster import ClusterExecutor, make_policy
+    from repro.sched.throughput import AnalyticModel, MeasuredModel
 
-    specs = parse_jobs(args.jobs, batch=args.batch, seq=args.seq,
-                       n_samples=args.n_samples,
-                       d_partitions=args.d_partitions)
+    if args.workload:
+        specs = parse_workload(args.workload, devices=args.devices,
+                               batch=args.batch, seq=args.seq,
+                               n_samples=args.n_samples,
+                               d_partitions=args.d_partitions)
+    else:
+        specs = parse_jobs(args.jobs, batch=args.batch, seq=args.seq,
+                           n_samples=args.n_samples,
+                           d_partitions=args.d_partitions)
     policy_kw = {}
     if args.quanta and args.policy in ("tiresias", "elastic-tiresias"):
         policy_kw["quanta"] = tuple(
             float(q) for q in args.quanta.split(","))
     policy = make_policy(args.policy, **policy_kw)
+    model = (MeasuredModel() if args.throughput_model == "measured"
+             else AnalyticModel())
     t0 = time.monotonic()
-    ex = ClusterExecutor(specs, policy, resched_every=args.resched_every)
+    ex = ClusterExecutor(specs, policy, resched_every=args.resched_every,
+                         throughput_model=model,
+                         profile_sweeps=args.profile_sweeps,
+                         compile_cache=args.compile_cache)
     stats = ex.run(max_rounds=args.max_rounds)
     stats["wall_s"] = round(time.monotonic() - t0, 2)
     ex.close()      # drop parked-job checkpoint state (unreachable now)
@@ -98,7 +167,8 @@ def main(argv=None):
     if args.json:
         print(json.dumps(stats))
         return 0
-    print(f"policy={args.policy} devices={ex.n_gpus} "
+    print(f"policy={args.policy} model={args.throughput_model} "
+          f"devices={ex.n_gpus} "
           f"rounds={stats['rounds']} wall={stats['wall_s']}s")
     print(f"{'job':>8s} {'profile':>10s} {'req_p':>5s} {'steps':>5s} "
           f"{'jct':>7s} {'loss':>8s}")
@@ -117,7 +187,8 @@ def main(argv=None):
     print(f"device conservation: {'OK' if stats['conserved'] else 'LEAK'}; "
           f"max transient loan: {stats['max_loaned']} device(s); "
           f"preemptions: {stats['preemptions']} "
-          f"(re-admitted {stats['readmissions']})")
+          f"(re-admitted {stats['readmissions']}); "
+          f"profile sweeps: {stats['profile_sweeps']}")
     return 0
 
 

@@ -1,9 +1,11 @@
-from repro.sched.base import StaticPolicy, alive_jobs
-from repro.sched.throughput import MaxThroughput, ModelProfile, PROFILES, \
-    throughput
+from repro.sched.base import MaxThroughput, StaticPolicy, alive_jobs, \
+    throughput_model_of
+from repro.sched.throughput import AnalyticModel, MeasuredModel, \
+    ModelProfile, PROFILES, ThroughputModel, throughput
 from repro.sched.simulator import ClusterSimulator, Job
 from repro.sched.tiresias import ElasticTiresias, Tiresias
 
-__all__ = ["StaticPolicy", "alive_jobs", "MaxThroughput", "ModelProfile",
-           "PROFILES", "throughput", "ClusterSimulator", "Job", "Tiresias",
-           "ElasticTiresias"]
+__all__ = ["StaticPolicy", "alive_jobs", "throughput_model_of",
+           "MaxThroughput", "ModelProfile", "PROFILES", "throughput",
+           "ThroughputModel", "AnalyticModel", "MeasuredModel",
+           "ClusterSimulator", "Job", "Tiresias", "ElasticTiresias"]

@@ -10,12 +10,17 @@ target allocation for every alive job. The ``view`` is anything exposing:
                   to be consistent with the policy's time parameters)
   view.running  — dict jid -> job (currently allocated jobs)
   view.pending  — list of jobs waiting for GPUs
+  view.throughput_model
+                — the repro.sched.throughput.ThroughputModel answering
+                  every t(p)/efficiency query (optional: views that omit it
+                  get a shared AnalyticModel via ``throughput_model_of``)
 
 and each job exposing: ``jid, model, requested_p, arrival, inelastic,
-attained_gpu_s, alloc, start_time, finish_time``. ``model`` names a profile
-in repro.sched.throughput.PROFILES — the analytic t(p) model the policies
-reason with (the paper's scheduler does the same; live measured throughput
-feeds back through profiling as a follow-on).
+attained_gpu_s, alloc, start_time, finish_time``. ``model`` names an
+analytic profile the ThroughputModel can use as prior; policies never
+query curves directly — all throughput reasoning goes through the view's
+model, so a live executor scheduling from MEASURED curves and the
+simulator scheduling from analytic ones run the identical policy code.
 
 Both ``repro.sched.simulator.Job`` and ``repro.cluster.job.ClusterJob``
 satisfy this, so Tiresias / Elastic-Tiresias / MaxThroughput / StaticPolicy
@@ -30,6 +35,16 @@ see a job whose checkpoint save is still in flight — its devices are not
 reclaimable until the save lands.
 """
 from __future__ import annotations
+
+from repro.sched.throughput import default_model
+
+
+def throughput_model_of(view):
+    """The ThroughputModel the view's owner schedules with. Views that
+    predate the seam (plain stand-ins in tests) fall back to the shared
+    default AnalyticModel — the pre-refactor behavior."""
+    model = getattr(view, "throughput_model", None)
+    return model if model is not None else default_model()
 
 
 def alive_jobs(view) -> list:
@@ -55,4 +70,60 @@ class StaticPolicy:
                 take = j.requested_p if free >= j.requested_p else 0
                 alloc[j.jid] = take
                 free -= take
+        return alloc
+
+
+class MaxThroughput:
+    """Throughput-maximizing allocator (water-filling over marginal gains).
+
+    Admission floor first — alive jobs in arrival order get 1 GPU each
+    (inelastic jobs: exactly ``requested_p`` or nothing) — then every
+    remaining GPU goes to the elastic job with the largest marginal
+    throughput gain, while that gain exceeds ``min_gain`` samples/s.
+    Alive includes preempted-and-parked jobs (they sit in ``view.pending``),
+    so a checkpointed tenant re-enters through the same admission floor as
+    a fresh arrival; a floor that no longer fits emits 0 — a real
+    checkpoint-stop preemption on the live executor.
+
+    Grants above a job's requested parallelism are transient-resource
+    loans: the next rebalance reclaims them automatically as soon as a
+    newly arrived job's floor (or a better marginal use) needs the GPUs.
+
+    Marginal gains come from ``view.throughput_model``: on a live executor
+    running a MeasuredModel, the water level reflects each job's MEASURED
+    scaling curve — a tenant whose real curve knees earlier than its
+    analytic prior loses the marginal GPU to a better scaler.
+
+    Works on the simulator and the live executor alike (sched.base view
+    interface).
+    """
+
+    def __init__(self, *, min_gain: float = 0.0, max_per_job: int | None = None):
+        self.min_gain = min_gain
+        self.max_per_job = max_per_job
+
+    def __call__(self, view) -> dict[int, int]:
+        tm = throughput_model_of(view)
+        jobs = sorted(alive_jobs(view), key=lambda j: (j.arrival, j.jid))
+        alloc: dict[int, int] = {}
+        free = view.n_gpus
+        for j in jobs:
+            need = j.requested_p if j.inelastic else 1
+            take = need if free >= need else 0
+            alloc[j.jid] = take
+            free -= take
+        cap = self.max_per_job or view.n_gpus
+        while free > 0:
+            best, best_gain = None, self.min_gain
+            for j in jobs:
+                p = alloc[j.jid]
+                if p == 0 or p >= cap or j.inelastic:
+                    continue
+                gain = tm.throughput(j, p + 1) - tm.throughput(j, p)
+                if gain > best_gain:
+                    best, best_gain = j, gain
+            if best is None:
+                break
+            alloc[best.jid] += 1
+            free -= 1
         return alloc

@@ -10,7 +10,10 @@ Jobs demand ``total_samples`` of work; a job allocated p GPUs progresses at
   * stop-resume    — ALL GPUs idle for ``context_prep_s`` on every change.
 
 The scheduler (Tiresias / Elastic-Tiresias / static) is a pluggable policy
-called on every event; it returns the new allocation map.
+called on every event; it returns the new allocation map. Job progress and
+all policy throughput queries go through ONE pluggable
+``repro.sched.throughput.ThroughputModel`` (default: the analytic Fig-1
+curves), exposed to policies as ``view.throughput_model``.
 """
 from __future__ import annotations
 
@@ -18,7 +21,7 @@ import dataclasses
 import heapq
 from typing import Callable
 
-from repro.sched.throughput import throughput
+from repro.sched.throughput import AnalyticModel, ThroughputModel
 
 
 @dataclasses.dataclass
@@ -51,8 +54,10 @@ class ScalingCosts:
 class ClusterSimulator:
     def __init__(self, n_gpus: int, jobs: list[Job], policy,
                  *, costs: ScalingCosts | None = None, quantum: float = 30.0,
-                 t_end: float = 10e6):
+                 t_end: float = 10e6,
+                 throughput_model: ThroughputModel | None = None):
         self.n_gpus = n_gpus
+        self.throughput_model = throughput_model or AnalyticModel()
         self.jobs = {j.jid: j for j in jobs}
         self.policy = policy
         self.costs = costs or ScalingCosts()
@@ -83,15 +88,16 @@ class ClusterSimulator:
             if j.frozen_until > self.now - dt:
                 eff_dt = max(0.0, self.now - j.frozen_until)
             if j.alloc > 0 and eff_dt > 0:
-                j.remaining -= throughput(j.model, j.alloc) * eff_dt
+                j.remaining -= \
+                    self.throughput_model.throughput(j, j.alloc) * eff_dt
             j.attained_gpu_s += j.alloc * dt
         used = sum(j.alloc for j in self.running.values())
         eff = sum(self._job_eff(j) for j in self.running.values())
         self.utilization_log.append((self.now, used, eff))
 
     def _job_eff(self, j: Job) -> float:
-        from repro.sched.throughput import efficiency
-        return j.alloc * efficiency(j.model, j.alloc) if j.alloc else 0.0
+        tm = self.throughput_model
+        return j.alloc * tm.efficiency(j, j.alloc) if j.alloc else 0.0
 
     def _apply_alloc(self, new_alloc: dict[int, int]):
         for jid, p in new_alloc.items():
@@ -128,7 +134,8 @@ class ClusterSimulator:
         if j.alloc <= 0 or j.remaining <= 0:
             return
         lead = max(j.frozen_until - self.now, 0.0)
-        t_done = self.now + lead + j.remaining / throughput(j.model, j.alloc)
+        t_done = self.now + lead + \
+            j.remaining / self.throughput_model.throughput(j, j.alloc)
         self._push(t_done, "maybe_done", j.jid)
 
     # -------------------------------------------------------------- driver

@@ -1,17 +1,35 @@
-"""Analytical throughput / GPU-efficiency model t(p) for the cluster
-simulator — the paper's Fig-1 shape: throughput grows sublinearly with p
-(ring-allreduce communication) and per-GPU efficiency decays; large models
-(VGG) even lose absolute throughput past a knee.
+"""Pluggable throughput models t(p) — the ONE seam every scheduling layer
+queries for "how fast does this job run at parallelism p?".
 
-step_time(p) = t_compute + 2 (p-1)/p * model_bytes / bw + c_latency * p
-throughput(p) = p * per_gpu_batch / step_time(p)
+Policies (MaxThroughput water-filling, Elastic-Tiresias marginal gain), the
+discrete-event simulator, and workload generators all consume a
+``ThroughputModel`` instead of hard-coded curves:
 
-Profiles approximate tf_cnn_benchmarks models (the paper's workload pool).
+  * ``AnalyticModel`` — the paper's Fig-1 shape: throughput grows
+    sublinearly with p (ring-allreduce communication), per-GPU efficiency
+    decays, and large models (VGG) even lose absolute throughput past a
+    knee.  Profiles approximate tf_cnn_benchmarks models (the paper's
+    workload pool):
+
+        step_time(p)  = t_compute + 2 (p-1)/p * model_bytes / bw + c_lat p
+        throughput(p) = p * per_gpu_batch / step_time(p)
+
+  * ``MeasuredModel`` — EDL §5.2 made real: a per-job profile store fed by
+    FREE observations (every live mini-batch's measured step time at the
+    job's current parallelism) blended with ``core.profiling.profile()``
+    scale-in sweep data, falling back to a scale-calibrated analytic prior
+    for parallelisms nobody has visited yet.  A job whose measured curve
+    knees earlier than its analytic prior really loses GPUs to a better
+    scaler.
+
+Views (simulator / live executor) expose the model as
+``view.throughput_model``; policies reach it through
+``repro.sched.base.throughput_model_of(view)`` and never import the curves
+directly.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,81 +55,242 @@ PROFILES: dict[str, ModelProfile] = {p.name: p for p in [
 ]}
 
 
-@functools.lru_cache(maxsize=None)
+def _profile_name(job) -> str:
+    """Accept either a job object (``.model`` names its analytic profile)
+    or a bare profile-name string (workload generators, tests)."""
+    return job if isinstance(job, str) else job.model
+
+
+class ThroughputModel:
+    """The t(p) interface every scheduling layer queries.
+
+    ``job`` is a scheduling-view job object (``.model`` names an analytic
+    profile; ``.jid``, when present, keys per-job measured curves) or a
+    bare profile-name string.
+
+      throughput(job, p)  — samples/s at parallelism p (0.0 at p <= 0)
+      step_time(job, p)   — seconds per mini-batch at p
+      efficiency(job, p)  — per-GPU throughput at p, normalized by the best
+                            per-GPU throughput over p in [1, max_p] (the
+                            paper's GPU-efficiency metric)
+      observe(job, p, t)  — feed back one measured step time (free
+                            observation from a live mini-batch); a no-op on
+                            models that do not learn
+
+    Models that can additionally bulk-load ``core.profiling.profile()``
+    sweep results define ``ingest(job, table)`` — its *absence* is how the
+    executor knows sweeping would be wasted on this model.
+    """
+
+    max_p: int = 64
+
+    def throughput(self, job, p: int) -> float:
+        raise NotImplementedError
+
+    def step_time(self, job, p: int) -> float:
+        raise NotImplementedError
+
+    def efficiency(self, job, p: int) -> float:
+        best = max(self.throughput(job, q) / q
+                   for q in range(1, self.max_p + 1))
+        return (self.throughput(job, p) / p) / best
+
+    def observe(self, job, p: int, step_time: float, *,
+                samples: int | None = None) -> None:
+        pass
+
+
+class AnalyticModel(ThroughputModel):
+    """The static analytic curves (paper Fig 1), stateless per job: every
+    job with the same profile name shares one curve.  ``best_per_gpu`` is
+    memoized per instance — safe because analytic curves never change
+    (unlike the measured model, where a module-global name-keyed cache
+    would go stale the moment an observation lands)."""
+
+    def __init__(self, profiles: dict[str, ModelProfile] | None = None,
+                 *, max_p: int = 64):
+        self.profiles = dict(profiles) if profiles is not None else PROFILES
+        self.max_p = max_p
+        self._best: dict[str, float] = {}
+
+    def step_time(self, job, p: int) -> float:
+        m = self.profiles[_profile_name(job)]
+        # (1 + p/16): ring contention / cross-machine hop penalty — gives
+        # the paper's Fig-1 VGG knee (throughput stops scaling past ~8)
+        comm = (2.0 * (p - 1) / p * m.model_gb / m.bw_gbps * (1.0 + p / 16.0)
+                + m.latency_s * p)
+        return m.t_compute + (comm if p > 1 else 0.0)
+
+    def throughput(self, job, p: int) -> float:
+        """samples/s at parallelism p (weak scaling: per-GPU batch const)."""
+        if p <= 0:
+            return 0.0
+        m = self.profiles[_profile_name(job)]
+        return p * m.per_gpu_batch / self.step_time(job, p)
+
+    def best_per_gpu(self, job) -> float:
+        name = _profile_name(job)
+        if name not in self._best:
+            self._best[name] = max(self.throughput(name, p) / p
+                                   for p in range(1, self.max_p + 1))
+        return self._best[name]
+
+    def efficiency(self, job, p: int) -> float:
+        """The paper's GPU efficiency: t(p)/p over the best per-GPU t."""
+        return (self.throughput(job, p) / p) / self.best_per_gpu(job)
+
+
+class MeasuredModel(ThroughputModel):
+    """Per-job measured t(p) curves with an analytic prior fallback.
+
+    The store keys on ``job.jid`` when present (two tenants running the
+    same architecture can scale differently — stragglers, data skew), else
+    on the profile name.  Two data sources blend into one curve per job:
+
+      * free observations — ``observe(job, p, step_time)`` from every live
+        mini-batch, EMA-smoothed per parallelism;
+      * sweep data — ``ingest(job, table)`` bulk-loads a
+        ``core.profiling.ProfileTable`` from a scale-in sweep, entering the
+        same EMA stream (a sweep seeds points free observations then
+        refine).
+
+    Queries at a visited p return the blended measurement.  Unvisited p
+    falls back to the analytic prior *rescaled* by the mean measured/prior
+    ratio over visited points, so a marginal-gain comparison between a
+    measured point and a predicted one stays in one unit system; with no
+    observations at all the model IS its prior.
+    """
+
+    def __init__(self, prior: ThroughputModel | None = None, *,
+                 ema: float = 0.3, max_p: int = 64):
+        self.prior = prior if prior is not None else AnalyticModel()
+        self.ema = ema
+        self.max_p = max_p
+        self._curves: dict[object, dict[int, float]] = {}   # key->p->thr
+        self._counts: dict[object, dict[int, int]] = {}
+        # per-key memos, invalidated by observation count ("version"): a
+        # name-keyed module cache would go stale, but within one version
+        # the curve cannot have changed
+        self._calib: dict[object, tuple[int, float]] = {}
+        self._best: dict[object, tuple[int, float]] = {}
+
+    # ------------------------------------------------------------- store
+    def _key(self, job):
+        jid = getattr(job, "jid", None)
+        return _profile_name(job) if jid is None else (jid,
+                                                       _profile_name(job))
+
+    def _batch_of(self, job, p: int) -> float:
+        """Samples per step: the live job's constant global batch when
+        known, else the prior's weak-scaling per-GPU batch at p."""
+        batch = getattr(getattr(job, "spec", None), "global_batch", None)
+        if batch is None:
+            name = _profile_name(job)
+            per_gpu = (self.prior.profiles[name].per_gpu_batch
+                       if hasattr(self.prior, "profiles") else 1)
+            batch = p * per_gpu
+        return float(batch)
+
+    def _record(self, job, p: int, thr: float):
+        if p <= 0 or thr <= 0:
+            return
+        key = self._key(job)
+        curve = self._curves.setdefault(key, {})
+        counts = self._counts.setdefault(key, {})
+        old = curve.get(p)
+        curve[p] = thr if old is None else \
+            (1.0 - self.ema) * old + self.ema * thr
+        counts[p] = counts.get(p, 0) + 1
+
+    def observe(self, job, p: int, step_time: float, *,
+                samples: int | None = None) -> None:
+        if p <= 0 or not step_time or step_time <= 0:
+            return
+        n = float(samples) if samples is not None else self._batch_of(job, p)
+        self._record(job, p, n / step_time)
+
+    def ingest(self, job, table) -> None:
+        """Bulk-load a ``core.profiling.ProfileTable`` sweep result."""
+        for p, point in table.items():
+            self._record(job, p, point.throughput)
+
+    def n_observations(self, job) -> dict[int, int]:
+        return dict(self._counts.get(self._key(job), {}))
+
+    def curve(self, job) -> dict[int, float]:
+        """The raw measured samples/s per visited parallelism (a copy)."""
+        return dict(self._curves.get(self._key(job), {}))
+
+    # ------------------------------------------------------------ queries
+    def _version(self, key) -> int:
+        return sum(self._counts.get(key, {}).values())
+
+    def _calibration(self, job, curve: dict[int, float]) -> float:
+        key = self._key(job)
+        version = self._version(key)
+        hit = self._calib.get(key)
+        if hit is not None and hit[0] == version:
+            return hit[1]
+        ratios = []
+        for p, thr in curve.items():
+            prior = self.prior.throughput(job, p)
+            if prior > 0:
+                ratios.append(thr / prior)
+        c = sum(ratios) / len(ratios) if ratios else 1.0
+        self._calib[key] = (version, c)
+        return c
+
+    def throughput(self, job, p: int) -> float:
+        if p <= 0:
+            return 0.0
+        curve = self._curves.get(self._key(job))
+        if not curve:
+            return self.prior.throughput(job, p)
+        if p in curve:
+            return curve[p]
+        return self._calibration(job, curve) * self.prior.throughput(job, p)
+
+    def efficiency(self, job, p: int) -> float:
+        """Per-GPU throughput at p over the best per-GPU point of the
+        blended curve; the O(max_p) best scan is memoized per curve
+        version so Tiresias's per-GPU inner loops stay cheap."""
+        key = self._key(job)
+        version = self._version(key)
+        hit = self._best.get(key)
+        if hit is not None and hit[0] == version:
+            best = hit[1]
+        else:
+            best = max(self.throughput(job, q) / q
+                       for q in range(1, self.max_p + 1))
+            self._best[key] = (version, best)
+        return (self.throughput(job, p) / p) / best
+
+    def step_time(self, job, p: int) -> float:
+        thr = self.throughput(job, p)
+        return self._batch_of(job, p) / thr if thr > 0 else float("inf")
+
+
+_DEFAULT_ANALYTIC = AnalyticModel()
+
+
+def default_model() -> AnalyticModel:
+    """The ONE process-wide AnalyticModel used wherever no model is
+    supplied (views predating the seam, workload sizing, the module-level
+    convenience functions) — shared so its best-per-GPU memo stays warm."""
+    return _DEFAULT_ANALYTIC
+
+
 def step_time(name: str, p: int) -> float:
-    m = PROFILES[name]
-    # (1 + p/16): ring contention / cross-machine hop penalty — gives the
-    # paper's Fig-1 VGG knee (throughput stops scaling past ~8 GPUs)
-    comm = (2.0 * (p - 1) / p * m.model_gb / m.bw_gbps * (1.0 + p / 16.0)
-            + m.latency_s * p)
-    return m.t_compute + (comm if p > 1 else 0.0)
+    """Analytic step time (module-level convenience; scheduling code goes
+    through the view's ThroughputModel instead)."""
+    return _DEFAULT_ANALYTIC.step_time(name, p)
 
 
-@functools.lru_cache(maxsize=None)
 def throughput(name: str, p: int) -> float:
-    """samples/s at parallelism p (weak scaling: per-GPU batch constant)."""
-    if p <= 0:
-        return 0.0
-    m = PROFILES[name]
-    return p * m.per_gpu_batch / step_time(name, p)
-
-
-@functools.lru_cache(maxsize=None)
-def best_per_gpu(name: str, max_p: int = 64) -> float:
-    return max(throughput(name, p) / p for p in range(1, max_p + 1))
+    """Analytic samples/s (module-level convenience)."""
+    return _DEFAULT_ANALYTIC.throughput(name, p)
 
 
 def efficiency(name: str, p: int) -> float:
-    """The paper's GPU efficiency: t(p) / t(p*) of per-GPU throughput."""
-    return (throughput(name, p) / p) / best_per_gpu(name)
-
-
-class MaxThroughput:
-    """Throughput-maximizing allocator (water-filling over marginal gains).
-
-    Admission floor first — alive jobs in arrival order get 1 GPU each
-    (inelastic jobs: exactly ``requested_p`` or nothing) — then every
-    remaining GPU goes to the elastic job with the largest marginal
-    throughput gain, while that gain exceeds ``min_gain`` samples/s.
-    Alive includes preempted-and-parked jobs (they sit in ``view.pending``),
-    so a checkpointed tenant re-enters through the same admission floor as
-    a fresh arrival; a floor that no longer fits emits 0 — a real
-    checkpoint-stop preemption on the live executor.
-
-    Grants above a job's requested parallelism are transient-resource
-    loans: the next rebalance reclaims them automatically as soon as a
-    newly arrived job's floor (or a better marginal use) needs the GPUs.
-
-    Works on the simulator and the live executor alike (sched.base view
-    interface).
-    """
-
-    def __init__(self, *, min_gain: float = 0.0, max_per_job: int | None = None):
-        self.min_gain = min_gain
-        self.max_per_job = max_per_job
-
-    def __call__(self, view) -> dict[int, int]:
-        from repro.sched.base import alive_jobs
-        jobs = sorted(alive_jobs(view), key=lambda j: (j.arrival, j.jid))
-        alloc: dict[int, int] = {}
-        free = view.n_gpus
-        for j in jobs:
-            need = j.requested_p if j.inelastic else 1
-            take = need if free >= need else 0
-            alloc[j.jid] = take
-            free -= take
-        cap = self.max_per_job or view.n_gpus
-        while free > 0:
-            best, best_gain = None, self.min_gain
-            for j in jobs:
-                p = alloc[j.jid]
-                if p == 0 or p >= cap or j.inelastic:
-                    continue
-                gain = throughput(j.model, p + 1) - throughput(j.model, p)
-                if gain > best_gain:
-                    best, best_gain = j, gain
-            if best is None:
-                break
-            alloc[best.jid] += 1
-            free -= 1
-        return alloc
+    """Analytic GPU efficiency (module-level convenience)."""
+    return _DEFAULT_ANALYTIC.efficiency(name, p)

@@ -18,13 +18,15 @@ Elastic-Tiresias adds two rules:
 Policies take a *view* (repro.sched.base): the discrete-event simulator and
 the live multi-tenant executor expose the same interface, so the identical
 policy object drives simulated ticks or real ElasticTrainer scaling calls.
+R1's efficiency gains and R2's marginal throughput gains are answered by
+``view.throughput_model`` — analytic curves on the simulator, live measured
+curves on an executor running a MeasuredModel.
 """
 from __future__ import annotations
 
 import math
 
-from repro.sched.base import alive_jobs
-from repro.sched.throughput import efficiency, throughput
+from repro.sched.base import alive_jobs, throughput_model_of
 
 
 class Tiresias:
@@ -68,12 +70,13 @@ class Tiresias:
                 waiting.append(j)
 
         if self.elastic:
-            alloc, free = self._compact(jobs, alloc, free, waiting)
-            alloc = self._expand(jobs, alloc, free, waiting)
+            tm = throughput_model_of(view)
+            alloc, free = self._compact(tm, jobs, alloc, free, waiting)
+            alloc = self._expand(tm, jobs, alloc, free, waiting)
         return alloc
 
     # ---------------------------------------------------------------- R1
-    def _compact(self, jobs, alloc, free, waiting):
+    def _compact(self, tm, jobs, alloc, free, waiting):
         if len(waiting) <= self.N:
             return alloc, free
         for pending in list(waiting):
@@ -88,7 +91,7 @@ class Tiresias:
                 while alloc[d.jid] > floor and free < pending.requested_p:
                     # remove the GPU whose removal gains the most efficiency
                     p = alloc[d.jid]
-                    gain = efficiency(d.model, p - 1) - efficiency(d.model, p)
+                    gain = tm.efficiency(d, p - 1) - tm.efficiency(d, p)
                     if gain < 0 and free > 0:
                         break   # shrinking would hurt; try next donor
                     alloc[d.jid] -= 1
@@ -102,7 +105,7 @@ class Tiresias:
         return alloc, free
 
     # ---------------------------------------------------------------- R2
-    def _expand(self, jobs, alloc, free, waiting):
+    def _expand(self, tm, jobs, alloc, free, waiting):
         if waiting:
             return alloc
         while free > 0:
@@ -111,8 +114,8 @@ class Tiresias:
                 p = alloc.get(j.jid, 0)
                 if p == 0 or j.inelastic:
                     continue
-                s_p = throughput(j.model, p)
-                gain = (throughput(j.model, p + 1) - s_p) / s_p
+                s_p = tm.throughput(j, p)
+                gain = (tm.throughput(j, p + 1) - s_p) / s_p
                 if gain > best_gain:
                     best, best_gain = j, gain
             if best is None:

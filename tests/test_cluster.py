@@ -21,8 +21,10 @@ import pytest
 from repro.cluster.executor import ClusterExecutor
 from repro.cluster.job import ClusterJob, JobSpec, JobState
 from repro.cluster.policy import make_policy, plan_actions
+from repro.core.profiling import ProfileTable, profile
 from repro.core.scaling import Phase
-from repro.sched.throughput import MaxThroughput, step_time
+from repro.sched.base import MaxThroughput
+from repro.sched.throughput import MeasuredModel, step_time
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 
@@ -34,41 +36,81 @@ class _Controller:
 
 class FakeTrainer:
     """ElasticTrainer's executor-facing surface with instant (blocking)
-    switches and the analytic step-time of the job's profile."""
+    switches and the analytic step-time of the job's profile (overridable
+    via ``step_time_fn`` to fake jobs whose REAL scaling contradicts their
+    analytic prior). Owns ``devices``; ``p`` tracks active slices
+    separately so a plain scale-in parks devices in the pool (like the
+    real trainer) while ``release=True`` hands them back."""
 
     def __init__(self, spec, devices):
         self.spec = spec
         self.devices = list(devices)
+        self._p = len(self.devices)
         self.controller = _Controller()
         self.injected_delay = {}
         self._flagged_stragglers = []
         self.metrics_log = []
         self.on_devices_released = None
         self.step_count = 0
+        self.step_time_fn = None
 
     @property
     def p(self):
-        return len(self.devices)
+        return self._p
+
+    @property
+    def global_batch(self):
+        return self.spec.global_batch
 
     @property
     def worker_ids(self):
         return [f"w{i}" for i in range(self.p)]
 
+    def _step_time(self):
+        if self.step_time_fn is not None:
+            return self.step_time_fn(self.p)
+        return step_time(self.spec.profile, self.p)
+
     def step(self):
         self.step_count += 1
         m = {"loss": 1.0 / self.step_count, "step": self.step_count,
-             "step_time": step_time(self.spec.profile, self.p)}
+             "p": self.p, "step_time": self._step_time()}
         self.metrics_log.append(m)
         return m
 
     def grant_devices(self, devs, *, block=False):
         self.devices.extend(devs)
+        self._p = len(self.devices)
 
     def release_devices(self, n, *, victims=None, block=False):
         assert n < self.p, "cannot release below one slice"
         freed, self.devices = self.devices[-n:], self.devices[:-n]
+        self._p = min(self._p, len(self.devices))
         if self.on_devices_released:
             self.on_devices_released(self, freed)
+
+    # ----- the subset of the elastic surface profile() sweeps drive
+    def scale_in(self, n=1, *, victims=None, block=False, release=False):
+        if release:
+            self.release_devices(n, victims=victims, block=block)
+        else:
+            assert n < self.p, "cannot scale below one slice"
+            self._p -= n            # devices stay parked in the pool
+
+    def scale_out(self, n=1, *, block=False):
+        assert self._p + n <= len(self.devices), "no devices in the pool"
+        self._p += n
+
+    def wait_for_scaling(self, max_steps=10_000):
+        pass                        # fake switches commit instantly
+
+    def run(self, n_steps, *, on_step=None):
+        for _ in range(n_steps):
+            self.step()
+        return n_steps
+
+    def throughput(self, last_n=20):
+        return self.spec.global_batch / self._step_time()
 
     def migrate(self, n=1, *, victims=None, block=False):
         self._flagged_stragglers = []
@@ -431,6 +473,151 @@ def test_plan_actions_respects_batch_divisibility():
     assert acts[0].target_p == 4
 
 
+# ------------------------------------------- profiling sweeps (EDL §5.2)
+def test_profile_restores_parallelism_and_returns_table():
+    """Bugfix regression: profile() used to leave the trainer parked at
+    min_p; it must restore the entry parallelism (devices retained) and
+    return a structured ProfileTable."""
+    tr = FakeTrainer(JobSpec("a", 4, 60, profile="resnet50"), [0, 1, 2, 3])
+    table = profile(tr, 1, 4, steps_per_p=3)
+    assert isinstance(table, ProfileTable)
+    assert sorted(table.entries) == [1, 2, 3, 4]
+    assert tr.p == 4 and len(tr.devices) == 4, \
+        "trainer restored to its entry parallelism, not parked at min_p"
+    assert max(pt.efficiency for pt in table.entries.values()) == 1.0
+    assert table[1].per_gpu >= table[4].per_gpu, \
+        "analytic fake step times: per-GPU throughput decays with p"
+
+
+def test_profile_skips_infeasible_parallelisms():
+    """Parallelisms that do not divide the global batch are skipped, not
+    crashed into (the real trainer refuses them)."""
+    tr = FakeTrainer(JobSpec("a", 4, 60, global_batch=8), [0, 1, 2, 3])
+    table = profile(tr, 1, 4, steps_per_p=3)
+    assert sorted(table.entries) == [1, 2, 4]       # 8 % 3 != 0
+    assert tr.p == 4
+
+
+def test_executor_profile_sweeps_prefill_measured_curves():
+    """Opt-in profiling mode: idle devices are loaned to a running job for
+    ONE scale-in sweep; the measured curve lands in the model, the job
+    returns to its scheduled parallelism, and every borrowed device comes
+    home (conservation)."""
+    mm = MeasuredModel()
+    ex = ClusterExecutor([JobSpec("a", 2, 40, profile="resnet50")],
+                         make_policy("static"), devices=list(range(4)),
+                         trainer_factory=FakeTrainer,
+                         checkpointer=FakeCheckpointer(),
+                         throughput_model=mm, profile_sweeps=True)
+    ex.run(max_rounds=6)
+    job = ex.jobs[0]
+    assert {2, 3, 4} <= set(mm.curve(job)), \
+        "the sweep must prefill every parallelism idle devices allowed"
+    assert job.alloc == 2 and len(ex.free) == 2, \
+        "the job is back at its scheduled parallelism, loans returned"
+    prof = [e for e in ex.events if e["op"] == "profile"]
+    assert prof and prof[0]["from_p"] == 4 and prof[0]["to_p"] == 2
+    assert prof[0]["loaned"] == 2, \
+        "the sweep's borrowed devices are a transient loan (requested 2, " \
+        "swept at 4)"
+    assert len(prof) == 1, "each job is swept at most once"
+    ex._assert_conserved()
+
+
+def test_executor_free_observations_feed_measured_model():
+    """Every live mini-batch is a free observation at the job's current
+    parallelism — no sweep needed for the visited point to converge."""
+    mm = MeasuredModel()
+    ex = ClusterExecutor([JobSpec("a", 2, 40, profile="resnet50")],
+                         make_policy("static"), devices=list(range(2)),
+                         trainer_factory=FakeTrainer,
+                         checkpointer=FakeCheckpointer(),
+                         throughput_model=mm)
+    ex.run(max_rounds=5)
+    job = ex.jobs[0]
+    assert mm.n_observations(job).get(2, 0) >= 4
+    want = job.spec.global_batch / step_time("resnet50", 2)
+    assert abs(mm.throughput(job, 2) - want) < 1e-9
+
+
+def test_measured_observations_flip_live_allocation():
+    """Acceptance: the SAME MaxThroughput policy on the SAME live workload
+    allocates differently once measured curves contradict the analytic
+    priors — the fake vgg19 job REALLY scales linearly (so it keeps its
+    GPUs) while the fake resnet50 job is REALLY flat (so it never gets
+    the loan the analytic model would have granted it)."""
+    def factory(spec, devices):
+        tr = FakeTrainer(spec, devices)
+        tr.step_time_fn = ((lambda p: 0.3 / p) if spec.name == "a"
+                           else (lambda p: 0.05))
+        return tr
+
+    def run(model):
+        specs = [JobSpec("a", 3, 60, profile="vgg19"),
+                 JobSpec("b", 1, 60, profile="resnet50")]
+        ex = ClusterExecutor(specs, MaxThroughput(),
+                             devices=list(range(4)), resched_every=2,
+                             trainer_factory=factory,
+                             checkpointer=FakeCheckpointer(),
+                             throughput_model=model)
+        if isinstance(model, MeasuredModel):
+            # curves as a prior sweep would have measured them
+            model.ingest(ex.jobs[0], ProfileTable.from_throughputs(
+                {p: 40.0 * p for p in (1, 2, 3, 4)}, batch=12))
+            model.ingest(ex.jobs[1], ProfileTable.from_throughputs(
+                {p: 240.0 for p in (1, 2, 3, 4)}, batch=12))
+        stats = ex.run(max_rounds=8)
+        return ex, stats
+
+    ex_a, sa = run(None)        # default analytic
+    assert _find(sa["events"], "scale_in", "a"), \
+        "analytic prior: vgg19 knees, so a is scaled in"
+    assert [e for e in _find(sa["events"], "scale_out", "b")
+            if e["from_p"] > 0], "analytic prior: b gets the loan"
+    assert (ex_a.jobs[0].alloc, ex_a.jobs[1].alloc) == (1, 3)
+
+    ex_m, sm = run(MeasuredModel())
+    assert not _find(sm["events"], "scale_in", "a"), \
+        "measured curves keep the real linear scaler at its GPUs"
+    assert not [e for e in _find(sm["events"], "scale_out", "b")
+                if e["from_p"] > 0], "the flat scaler never gets the loan"
+    assert (ex_m.jobs[0].alloc, ex_m.jobs[1].alloc) == (3, 1)
+    assert sa["conserved"] and sm["conserved"]
+
+
+def test_parse_workload_synthesizes_live_specs():
+    """--workload feeds the sched.workload trace generators into the LIVE
+    executor's spec grammar."""
+    from repro.launch.cluster import parse_workload
+    specs = parse_workload("trace=philly seed=1 jobs=5 steps=4:8",
+                           devices=4, batch=12, seq=64, n_samples=1 << 10,
+                           d_partitions=16)
+    assert len(specs) == 5
+    assert all(4 <= s.total_steps <= 8 for s in specs)
+    assert all(12 % s.requested_p == 0 and s.requested_p <= 4
+               for s in specs)
+    with pytest.raises(ValueError):
+        parse_workload("trace=nope", devices=4, batch=12, seq=64,
+                       n_samples=1 << 10, d_partitions=16)
+
+
+def test_compile_cache_option_configures_jax(tmp_path):
+    import jax
+    from repro.cluster.executor import enable_compile_cache
+    old = {k: getattr(jax.config, k) for k in
+           ("jax_compilation_cache_dir",
+            "jax_persistent_cache_min_compile_time_secs",
+            "jax_persistent_cache_min_entry_size_bytes")}
+    try:
+        path = enable_compile_cache(str(tmp_path / "cc"))
+        assert jax.config.jax_compilation_cache_dir == path
+        assert os.path.isdir(path)
+        assert jax.config.jax_persistent_cache_min_compile_time_secs == 0.0
+    finally:
+        for k, v in old.items():
+            jax.config.update(k, v)
+
+
 # ------------------------------------ one policy interface, two substrates
 def test_max_throughput_drives_the_simulator_too():
     """The same policy object schedules the discrete-event simulator —
@@ -514,6 +701,43 @@ def test_live_cluster_preempts_to_checkpoint_and_readmits():
             "restored trainer continues its step count (state continuity)"
         assert j["final_loss"] is not None
     assert s["preemptions"] >= 1 and s["readmissions"] >= 1
+
+
+@pytest.mark.slow
+def test_live_cluster_measured_model_on_workload_trace(tmp_path):
+    """Live end-to-end of the new seams: a synthesized arrival trace
+    (--workload) drives REAL trainers scheduled from a MeasuredModel fed
+    by live step times, with a persistent compilation cache enabled."""
+    cache = tmp_path / "xla-cache"
+    s = run_cluster_driver(
+        "--policy", "throughput", "--throughput-model", "measured",
+        "--workload", "trace=synthetic seed=0 jobs=2 steps=3:6",
+        "--compile-cache", str(cache), "--max-rounds", "250",
+        timeout=1200)
+    assert s["conserved"] is True
+    assert s["throughput_model"] == "MeasuredModel"
+    assert s["finished"] == 2, s["jobs"]
+    for j in s["jobs"]:
+        assert j["final_loss"] is not None
+    assert cache.is_dir() and any(cache.iterdir()), \
+        "the persistent compilation cache must be written to"
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("model", ["analytic", "measured"])
+def test_bench_smoke_cluster_under_both_models(model):
+    """`make bench-smoke` contract: the cluster benchmark runs a tiny live
+    config under BOTH --throughput-model settings and emits its CSV."""
+    cmd = [sys.executable, "benchmarks/cluster_bench.py",
+           "--policies", "throughput", "--throughput-model", model,
+           "--jobs", "a=vgg19:2:6@0,b=resnet50:1:8@0",
+           "--max-rounds", "150"]
+    env = {**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")}
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                         cwd=ROOT, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert f"cluster_throughput_{model}," in out.stdout
 
 
 @pytest.mark.slow

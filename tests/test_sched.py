@@ -1,11 +1,16 @@
-"""Scheduler layer: throughput model shape, Tiresias/Elastic-Tiresias
-invariants and the JCT improvement claim."""
+"""Scheduler layer: throughput model shape, the pluggable ThroughputModel
+seam (AnalyticModel bit-for-bit regression, MeasuredModel convergence and
+prior fallback), Tiresias/Elastic-Tiresias invariants and the JCT
+improvement claim."""
 import numpy as np
+import pytest
 
+from repro.sched.base import MaxThroughput
 from repro.sched.simulator import ClusterSimulator, Job, ScalingCosts
-from repro.sched.throughput import PROFILES, efficiency, throughput
+from repro.sched.throughput import AnalyticModel, MeasuredModel, PROFILES, \
+    efficiency, throughput
 from repro.sched.tiresias import ElasticTiresias, Tiresias
-from repro.sched.workload import philly_like, synthetic_16
+from repro.sched.workload import philly_like, synthetic_16, to_cluster_specs
 
 
 def test_throughput_model_fig1_shape():
@@ -17,6 +22,160 @@ def test_throughput_model_fig1_shape():
         assert e[0] >= e[-1]
     # the paper's VGG knee: throughput stops scaling past ~8 GPUs
     assert throughput("vgg19", 32) < 2.8 * throughput("vgg19", 8)
+
+
+# ------------------------------------------------ pluggable ThroughputModel
+def test_analytic_model_matches_module_functions_bitwise():
+    """AnalyticModel (no lru_caches) computes the exact same floats as the
+    module-level convenience functions — same formula, same op order."""
+    am = AnalyticModel()
+    for name in PROFILES:
+        for p in (1, 2, 3, 4, 7, 8, 16, 32, 64):
+            assert am.throughput(name, p) == throughput(name, p)
+            assert am.efficiency(name, p) == efficiency(name, p)
+    assert am.throughput(name, 0) == 0.0
+
+
+def test_analytic_model_reproduces_pre_refactor_schedules():
+    """Golden regression: these numbers were captured by running the
+    simulator at cdf667f (before the ThroughputModel refactor); the
+    default AnalyticModel must reproduce the schedules bit-for-bit."""
+    golden = {
+        "synth_et": (370.86646267797596, 792.7713306391298),
+        "synth_mt": (307.55018191005615, 914.7097520934001),
+        "philly_t": (83381.73202921242, 2225355.6992867305),
+        "philly_et": (40619.38695359067, 494266.60073687613),
+    }
+    runs = {
+        "synth_et": (32, synthetic_16(), ElasticTiresias(N=0), "edl"),
+        "synth_mt": (32, synthetic_16(), MaxThroughput(), "edl"),
+        "philly_t": (16, philly_like(n_jobs=60, seed=3), Tiresias(),
+                     "stop_resume"),
+        "philly_et": (16, philly_like(n_jobs=60, seed=3), ElasticTiresias(),
+                      "edl"),
+    }
+    for key, (n, jobs, pol, mode) in runs.items():
+        stats = ClusterSimulator(n, jobs, pol,
+                                 costs=ScalingCosts(mode=mode),
+                                 throughput_model=AnalyticModel()).run()
+        mean_jct, makespan = golden[key]
+        assert stats["mean_jct"] == mean_jct, key
+        assert stats["makespan"] == makespan, key
+
+
+class _FakeJob:
+    """Minimal measured-model client: jid keys the per-job store, model
+    names the analytic prior, spec.global_batch sizes one step."""
+
+    class spec:
+        global_batch = 12
+
+    def __init__(self, jid, model="resnet50"):
+        self.jid = jid
+        self.model = model
+
+
+def test_measured_model_converges_to_injected_step_times():
+    mm = MeasuredModel()
+    job = _FakeJob(1)
+    for _ in range(40):
+        mm.observe(job, 2, 0.05)        # 12 samples / 0.05 s = 240/s
+        mm.observe(job, 4, 0.03)        # 400/s
+    assert mm.throughput(job, 2) == pytest.approx(240.0)
+    assert mm.throughput(job, 4) == pytest.approx(400.0)
+    assert mm.step_time(job, 2) == pytest.approx(0.05)
+    # efficiency normalizes per-GPU throughput over the whole curve
+    assert 0.0 < mm.efficiency(job, 4) <= 1.0
+    assert mm.n_observations(job) == {2: 40, 4: 40}
+
+
+def test_measured_model_falls_back_to_analytic_prior():
+    am = AnalyticModel()
+    mm = MeasuredModel(prior=am)
+    virgin = _FakeJob(9, "vgg19")
+    # no observations at all: the model IS its prior
+    for p in (1, 2, 4, 8):
+        assert mm.throughput(virgin, p) == am.throughput("vgg19", p)
+    # one visited p: unvisited p follows the prior SHAPE, rescaled by the
+    # measured/prior ratio — so mixed comparisons stay in one unit system
+    job = _FakeJob(2, "vgg19")
+    mm.observe(job, 2, 0.05)
+    ratio = (12 / 0.05) / am.throughput("vgg19", 2)
+    assert mm.throughput(job, 2) == pytest.approx(12 / 0.05)
+    assert mm.throughput(job, 4) == pytest.approx(
+        ratio * am.throughput("vgg19", 4))
+    # per-job store: job 2's observations never leak onto other jobs
+    assert mm.throughput(_FakeJob(3, "vgg19"), 2) == \
+        am.throughput("vgg19", 2)
+
+
+def test_measured_model_ingests_profile_table():
+    from repro.core.profiling import ProfileTable
+    mm = MeasuredModel()
+    job = _FakeJob(5)
+    table = ProfileTable.from_throughputs({1: 100.0, 2: 180.0, 4: 260.0},
+                                          batch=12)
+    mm.ingest(job, table)
+    for p, thr in {1: 100.0, 2: 180.0, 4: 260.0}.items():
+        assert mm.throughput(job, p) == pytest.approx(thr)
+    assert table[4].per_gpu == pytest.approx(65.0)
+    assert table[1].efficiency == 1.0   # best per-GPU point of this sweep
+
+
+def test_measured_model_flips_max_throughput_water_filling():
+    """The acceptance story at the model level: under the analytic prior
+    the marginal GPU goes to resnet50; with measured curves saying the
+    vgg19 job actually scales linearly while resnet50 is flat, the SAME
+    policy hands the marginal GPUs to vgg19 instead."""
+    from repro.core.profiling import ProfileTable
+
+    class _View:
+        n_gpus = 4
+        now = 0.0
+        pending = []
+
+        def __init__(self, jobs, model):
+            self.running = {j.jid: j for j in jobs}
+            self.throughput_model = model
+
+    def mk(jid, name, alloc):
+        j = _FakeJob(jid, name)
+        j.requested_p, j.arrival, j.inelastic = alloc, 0.0, False
+        j.alloc, j.attained_gpu_s = alloc, 0.0
+        j.start_time, j.finish_time = 0.0, None
+        return j
+
+    a, b = mk(0, "vgg19", 3), mk(1, "resnet50", 1)
+    pol = MaxThroughput()
+    analytic = pol(_View([a, b], AnalyticModel()))
+    assert analytic == {0: 1, 1: 3}, "analytic prior: resnet50 wins GPUs"
+    mm = MeasuredModel()
+    mm.ingest(a, ProfileTable.from_throughputs(
+        {p: 120.0 * p for p in (1, 2, 3, 4)}, batch=12))   # linear scaler
+    mm.ingest(b, ProfileTable.from_throughputs(
+        {p: 240.0 for p in (1, 2, 3, 4)}, batch=12))       # flat scaler
+    measured = pol(_View([a, b], mm))
+    assert measured == {0: 3, 1: 1}, \
+        "measured curves must flip the water-filling decision"
+
+
+def test_workload_cluster_specs_are_live_feasible():
+    """to_cluster_specs maps trace jobs onto specs the live trainer can
+    actually run: p divides the global batch and fits the pool, steps land
+    in the requested range, arrivals are non-negative rounds."""
+    jobs = philly_like(seed=1, n_jobs=12)
+    specs = to_cluster_specs(jobs, devices=4, batch=12, steps=(4, 20))
+    assert len(specs) == 12
+    assert all(12 % s.requested_p == 0 for s in specs)
+    assert all(1 <= s.requested_p <= 4 for s in specs)
+    assert all(4 <= s.total_steps <= 20 for s in specs)
+    assert min(s.arrival for s in specs) == 0.0
+    assert all(isinstance(s.arrival, float) for s in specs)
+    # deterministic in the seed
+    again = to_cluster_specs(philly_like(seed=1, n_jobs=12),
+                             devices=4, batch=12, steps=(4, 20))
+    assert [(s.name, s.total_steps, s.arrival) for s in specs] == \
+        [(s.name, s.total_steps, s.arrival) for s in again]
 
 
 def test_capacity_never_exceeded_and_floor_respected():
