@@ -10,10 +10,16 @@ analytic t(p) curves or per-job measured curves fed by live step times
 (``--profile-sweeps`` additionally prefills them via EDL-profile scale-in
 sweeps on idle devices). ``--policies`` shrinks the sweep for smoke runs
 (``make bench-smoke`` runs one tiny policy under BOTH models).
+``--model-parallel M`` makes every tenant without an explicit ``:mp=``
+field model-parallel: allocations then move M-device groups, measuring
+what 2-D (data x model) packing costs relative to the mp=1 baseline on
+the same pool; per-job degrees mix via the job grammar's ``:mp=`` field.
 
   PYTHONPATH=src python benchmarks/cluster_bench.py
   PYTHONPATH=src python benchmarks/cluster_bench.py \
       --throughput-model measured --policies throughput
+  PYTHONPATH=src python benchmarks/cluster_bench.py --devices 8 \
+      --policies throughput --model-parallel 2
 """
 import argparse
 import os
@@ -34,6 +40,10 @@ def main():
                     help="comma-separated policy subset to run")
     ap.add_argument("--throughput-model", default="analytic",
                     choices=["analytic", "measured"])
+    ap.add_argument("--model-parallel", type=int, default=1, metavar="M",
+                    help="default model-parallel degree for jobs without "
+                         "an explicit :mp= field — allocations move "
+                         "M-device groups")
     ap.add_argument("--profile-sweeps", action="store_true")
     ap.add_argument("--max-rounds", type=int, default=300)
     ap.add_argument("--compile-cache", default=None, metavar="DIR")
@@ -48,7 +58,7 @@ def main():
     results = {}
     for name in args.policies.split(","):
         specs = parse_jobs(args.jobs, batch=12, seq=64, n_samples=1 << 10,
-                           d_partitions=16)
+                           d_partitions=16, default_mp=args.model_parallel)
         model = (MeasuredModel() if args.throughput_model == "measured"
                  else AnalyticModel())
         t0 = time.monotonic()
@@ -69,7 +79,9 @@ def main():
                          "profile_sweeps": stats["profile_sweeps"],
                          "events": len(stats["events"]),
                          "wall_s": round(wall, 2)}
-        emit(f"cluster_{name}_{args.throughput_model}", wall * 1e6,
+        tag = f"cluster_{name}_{args.throughput_model}" + (
+            f"_mp{args.model_parallel}" if args.model_parallel != 1 else "")
+        emit(tag, wall * 1e6,
              f"mean_jct={jct:.1f}_rounds" if jct is not None
              else "mean_jct=unfinished")
 
@@ -82,8 +94,12 @@ def main():
     red = 1 - min(elastic) / base if base and elastic else None
     if red is not None:
         emit("cluster_elastic_vs_static", 0.0, f"jct_reduction={red:.1%}")
-    save(f"cluster_{args.throughput_model}",
-         {"throughput_model": args.throughput_model, "results": results,
+    # keyed by mp too: an mp>1 run must not overwrite the mp=1 baseline
+    # it is meant to be compared against
+    save(f"cluster_{args.throughput_model}" + (
+         f"_mp{args.model_parallel}" if args.model_parallel != 1 else ""),
+         {"throughput_model": args.throughput_model,
+          "model_parallel": args.model_parallel, "results": results,
           "jct_reduction": red})
 
 

@@ -14,9 +14,15 @@ re-admits it from the saved state once capacity frees up.
   PYTHONPATH=src python examples/multi_tenant_cluster.py \
       --policy tiresias --quanta 0.1,1000 \
       --jobs "a=resnet50:2:20@0,b=vgg19:4:12@6"
+  # a model-parallel tenant (2-D data x model mesh): mp=2 makes every
+  # grant/reclaim move a whole 2-device group — one data-parallel replica
+  PYTHONPATH=src python examples/multi_tenant_cluster.py \
+      --policy throughput \
+      --jobs "big=vgg19:1:20:mp=2@0,a=resnet50:1:8@0,b=googlenet:1:6@0"
 
 Pass --jobs to change the tenant mix (grammar:
-``name=profile:requested_p:total_steps@arrival_round``).
+``name=profile:requested_p:total_steps[:mp=M]@arrival_round``; see
+docs/scheduling.md for how each policy packs mixed-mp tenants).
 """
 import sys
 

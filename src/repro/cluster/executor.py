@@ -37,11 +37,22 @@ runs EDL §5.2 scale-in sweeps on transient idle devices to prefill whole
 curves — so allocation decisions follow what jobs really do, not what
 their profile name predicts.
 
+Allocation unit — the DEVICE GROUP: a job with ``model_parallel = mp``
+trains on a 2-D ``(data, model)`` mesh and every grant, reclaim, loan,
+preemption and re-admission moves whole mp-sized groups (one data-parallel
+replica each). Policies count groups (their allocation maps are in
+replicas, ``sched.base.group_size`` gives the device cost); the executor
+converts at the pool boundary — popping ``groups * mp`` devices on a
+grant, asking the trainer for ``groups`` slices on a release — so a
+4-device mp=2 tenant and four 1-device mp=1 tenants pack the same pool
+under the same policy arithmetic.
+
 Device conservation — running jobs' pools, plus devices held by in-flight
 preemption checkpoints, plus the free pool equals the cluster size — is
-asserted after every round; devices move ownership only synchronously
-(grant), at a commit boundary (release/finish), or when a checkpoint save
-lands (preempt), so the invariant is exact even with scale operations and
+asserted after every round IN DEVICES (``ClusterJob.devices_held``, not
+group counts); devices move ownership only synchronously (grant), at a
+commit boundary (release/finish), or when a checkpoint save lands
+(preempt), so the invariant is exact even with scale operations and
 checkpoints in flight.
 """
 from __future__ import annotations
@@ -72,14 +83,17 @@ def enable_compile_cache(path: str) -> str:
 
 
 def default_trainer_factory(spec: JobSpec, devices: list):
-    """Build a real ElasticTrainer owning exactly ``devices``."""
+    """Build a real ElasticTrainer owning exactly ``devices`` — a whole
+    number of mp-sized groups, each one data-parallel replica of the
+    trainer's ``(data, model)`` mesh."""
     from repro.configs import get_config
     from repro.core import ElasticTrainer
     from repro.optim import adamw
     cfg = get_config(spec.arch, smoke=True)
     return ElasticTrainer(
         cfg, global_batch=spec.global_batch, seq_len=spec.seq_len,
-        init_parallelism=len(devices), optimizer=adamw(spec.lr),
+        init_parallelism=len(devices) // spec.model_parallel,
+        model_parallel=spec.model_parallel, optimizer=adamw(spec.lr),
         n_samples=spec.n_samples, d_partitions=spec.d_partitions,
         job_handle=spec.name, seed=spec.seed, devices=devices,
         time_allowance_s=0.1)
@@ -185,6 +199,12 @@ class ClusterExecutor:
         if throughput_model is None:
             from repro.sched.throughput import AnalyticModel
             throughput_model = AnalyticModel()
+        for s in specs:
+            if s.model_parallel > len(devices):
+                raise ValueError(
+                    f"{s.name}: model_parallel={s.model_parallel} is "
+                    f"infeasible on a {len(devices)}-device pool — even "
+                    f"one group cannot be granted")
         # the model policies consume via the view (sched.base); every
         # mini-batch feeds it a free observation, and with profile_sweeps
         # idle devices prefill whole curves via scale-in sweeps
@@ -223,6 +243,7 @@ class ClusterExecutor:
         e = {
             "round": self.round, "op": op, "job": job.spec.name,
             "jid": job.jid, "from_p": from_p, "to_p": to_p,
+            "mp": job.mp,       # from_p/to_p/loaned are GROUP counts
             "loaned": (max(0, to_p - job.requested_p)
                        if loaned is None else loaned)}
         if devices is not None:
@@ -238,8 +259,8 @@ class ClusterExecutor:
         self.free.extend(freed)
         job = self.jobs.get(getattr(trainer, "_cluster_jid", -1))
         if job is not None:
-            self._event("scale_in", job, job.alloc + len(freed), job.alloc,
-                        devices=freed)
+            self._event("scale_in", job, job.alloc + len(freed) // job.mp,
+                        job.alloc, devices=freed)
 
     # ---------------------------------------------------------- admission
     def _admit_arrivals(self):
@@ -247,17 +268,18 @@ class ClusterExecutor:
             job = self._to_arrive.pop(0)
             # jobs launch at their requested parallelism when it fits;
             # otherwise they queue and the policy decides (compaction etc.)
-            if len(self.free) >= job.requested_p:
+            if len(self.free) >= job.requested_p * job.mp:
                 self._start(job, job.requested_p)
             else:
                 self.pending.append(job)
 
     def _start(self, job: ClusterJob, p: int):
-        """Admit ``job`` on ``p`` devices from the free pool. When the job
-        carries a checkpoint handle this is a re-admission: the fresh
-        trainer (possibly on a different device set / parallelism) is
-        restored from the saved state before it takes its first step."""
-        devs = [self.free.pop(0) for _ in range(p)]
+        """Admit ``job`` on ``p`` mp-sized device groups from the free
+        pool. When the job carries a checkpoint handle this is a
+        re-admission: the fresh trainer (possibly on a different device
+        set / parallelism) is restored from the saved state before it
+        takes its first step."""
+        devs = [self.free.pop(0) for _ in range(p * job.mp)]
         trainer = job.launch(devs, self.trainer_factory)
         trainer.on_devices_released = self._on_devices_released
         trainer._cluster_jid = job.jid
@@ -357,14 +379,16 @@ class ClusterExecutor:
                 del self._wants[jid]
 
     def _satisfy_wants(self):
-        """Grant free devices toward wanted growth, FIFO by arrival —
-        this is where one job's scale-in (or preemption) funds another's
-        scale-out or a parked job's re-admission."""
+        """Grant free devices toward wanted growth in whole mp-sized
+        groups, FIFO by arrival — this is where one job's scale-in (or
+        preemption) funds another's scale-out or a parked job's
+        re-admission. Leftover devices smaller than a job's group size
+        stay free rather than being parked uselessly in its pool."""
         for jid in sorted(self._wants,
                           key=lambda i: (self.jobs[i].arrival, i)):
             job, target = self.jobs[jid], self._wants[jid]
             if job.trainer is None:
-                if len(self.free) >= target and not (
+                if len(self.free) >= target * job.mp and not (
                         self.serialize_prep and self._prep_in_flight()):
                     self._start(job, target)    # foreground compile
                 continue
@@ -372,7 +396,7 @@ class ClusterExecutor:
             if target <= cur:
                 del self._wants[jid]
                 continue
-            take = min(target - cur, len(self.free))
+            take = min(target - cur, len(self.free) // job.mp)
             # a PARTIAL grant must itself land on a feasible parallelism
             # (global batch divisibility), not just the final target
             take = job.feasible_p(cur + take) - cur
@@ -380,7 +404,7 @@ class ClusterExecutor:
                 continue
             if self.serialize_prep and self._prep_in_flight():
                 continue        # grants compile too; one prep at a time
-            devs = [self.free.pop(0) for _ in range(take)]
+            devs = [self.free.pop(0) for _ in range(take * job.mp)]
             try:
                 job.trainer.grant_devices(devs)
             except (Busy, ValueError):
@@ -419,11 +443,12 @@ class ClusterExecutor:
             if trainer.controller.phase is not Phase.IDLE:
                 continue
             cur = job.alloc
-            max_p = job.feasible_p(min(cur + len(self.free), self.n_gpus))
+            max_p = job.feasible_p(min(cur + len(self.free) // job.mp,
+                                       self.n_gpus // job.mp))
             if max_p <= cur:
                 continue    # too few idle devices to learn anything NEW
                             # right now; retry when more free up
-            devs = [self.free.pop(0) for _ in range(max_p - cur)]
+            devs = [self.free.pop(0) for _ in range((max_p - cur) * job.mp)]
             try:
                 trainer.grant_devices(devs)
             except (Busy, ValueError):
@@ -498,10 +523,13 @@ class ClusterExecutor:
 
     def _assert_conserved(self):
         """Every device is in exactly one place: a live job's pool, a
-        mid-checkpoint job's pool (held until the save lands), or free."""
-        live = sum(j.alloc for j in self.jobs.values()
+        mid-checkpoint job's pool (held until the save lands), or free.
+        Counted in DEVICES (``devices_held``), not groups — a leaked
+        half-group would be invisible to group arithmetic."""
+        live = sum(j.devices_held for j in self.jobs.values()
                    if j.jid not in self.checkpointing)
-        pending_ckpt = sum(j.alloc for j in self.checkpointing.values())
+        pending_ckpt = sum(j.devices_held
+                           for j in self.checkpointing.values())
         assert live + pending_ckpt + len(self.free) == self.n_gpus, \
             (f"device leak: {live} live + {pending_ckpt} checkpointing "
              f"+ {len(self.free)} free != {self.n_gpus}")
@@ -595,7 +623,10 @@ class ClusterExecutor:
             "mean_jct": (sum(jcts) / len(jcts)) if jcts else None,
             "makespan": max((j.finish_time for j in self.finished),
                             default=None),
-            "max_loaned": max((e["loaned"] for e in self.events), default=0),
+            # event "loaned" is in groups; the stat reports peak DEVICES on
+            # loan so mixed-mp loans compare in one unit
+            "max_loaned": max((e["loaned"] * e.get("mp", 1)
+                               for e in self.events), default=0),
             "preemptions": sum(1 for e in self.events
                                if e["op"] == "preempt"),
             "readmissions": sum(1 for e in self.events

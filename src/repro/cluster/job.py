@@ -30,9 +30,10 @@ import enum
 
 def feasible_parallelism(global_batch: int, target: int) -> int:
     """Largest parallelism <= target the live trainer can actually run at
-    (the global batch must divide evenly); 0 when target < 1. The ONE
-    implementation of the feasibility clamp — ClusterJob, workload spec
-    synthesis, and anything sizing grants all share it."""
+    (the global batch must divide evenly across the data-parallel
+    replicas — ``target`` is in GROUPS, not devices); 0 when target < 1.
+    The ONE implementation of the feasibility clamp — ClusterJob, workload
+    spec synthesis, and anything sizing grants all share it."""
     if target < 1:
         return 0
     p = target
@@ -53,11 +54,15 @@ class JobState(enum.Enum):
 class JobSpec:
     """One tenant's elastic training job.
 
-    ``profile`` names an analytic scaling profile in
-    repro.sched.throughput.PROFILES — the *prior* the executor's
-    ThroughputModel starts from (a MeasuredModel overrides it per-job as
-    live observations and profiling sweeps land); the actual training
-    workload is the (transformer) ``arch`` config.
+    ``requested_p`` is in device GROUPS (data-parallel replicas);
+    ``model_parallel`` is the devices-per-group size — the model axis of
+    the trainer's 2-D ``(data, model)`` mesh. The executor grants,
+    reclaims, loans and preempts whole groups: an mp=2 tenant at p
+    replicas owns ``2 p`` devices. ``profile`` names an analytic scaling
+    profile in repro.sched.throughput.PROFILES — the *prior* the
+    executor's ThroughputModel starts from (a MeasuredModel overrides it
+    per-job as live observations and profiling sweeps land); the actual
+    training workload is the (transformer) ``arch`` config.
     """
     name: str
     requested_p: int
@@ -68,10 +73,19 @@ class JobSpec:
     seq_len: int = 64
     arrival: float = 0.0        # executor-clock units (scheduling rounds)
     inelastic: bool = False
+    model_parallel: int = 1     # devices per group (the mesh's model axis)
     lr: float = 1e-3
     n_samples: int = 1 << 10
     d_partitions: int = 16
     seed: int = 0
+
+    def __post_init__(self):
+        if self.model_parallel < 1:
+            raise ValueError(f"{self.name}: model_parallel must be >= 1, "
+                             f"got {self.model_parallel}")
+        if self.requested_p < 1:
+            raise ValueError(f"{self.name}: requested_p must be >= 1, "
+                             f"got {self.requested_p}")
 
 
 class ClusterJob:
@@ -113,7 +127,12 @@ class ClusterJob:
         return self.spec.inelastic
 
     @property
-    def alloc(self) -> int:
+    def mp(self) -> int:
+        """Devices per allocation group (sched.base.group_size)."""
+        return self.spec.model_parallel
+
+    @property
+    def devices_held(self) -> int:
         """Devices this job currently OWNS (its whole pool — during an
         in-flight release OR an in-flight preemption checkpoint they still
         count here until the switch commits / the save lands, which is what
@@ -121,17 +140,28 @@ class ClusterJob:
         return len(self.trainer.devices) if self.trainer is not None else 0
 
     @property
+    def alloc(self) -> int:
+        """Allocation in GROUPS (data-parallel replicas) — the unit every
+        policy reasons in. ``devices_held`` is the device-denominated twin
+        the conservation assert counts."""
+        return self.devices_held // self.spec.model_parallel
+
+    @property
     def remaining_steps(self) -> int:
         return max(0, self.spec.total_steps - self.steps_done)
 
     # ------------------------------------------------------------ lifecycle
     def launch(self, devices: list, trainer_factory):
-        """Build the live trainer on ``devices``. Used both for first
-        admission and for re-admission after a preemption (the executor
-        restores the checkpoint into the fresh trainer right after)."""
+        """Build the live trainer on ``devices`` (a whole number of
+        mp-sized groups). Used both for first admission and for
+        re-admission after a preemption (the executor restores the
+        checkpoint into the fresh trainer right after)."""
         assert self.trainer is None, f"{self.spec.name} already launched"
         assert self.state in (JobState.PENDING, JobState.PREEMPTED), \
             f"cannot launch from {self.state}"
+        assert len(devices) % self.spec.model_parallel == 0, \
+            (f"{self.spec.name}: {len(devices)} devices is not a whole "
+             f"number of mp={self.spec.model_parallel} groups")
         self.trainer = trainer_factory(self.spec, list(devices))
         self.state = JobState.RUNNING
         return self.trainer
@@ -151,16 +181,19 @@ class ClusterJob:
         self.n_preemptions += 1
 
     def feasible_p(self, target: int) -> int:
-        """Largest parallelism <= target the job can actually run at. 0
-        means full preemption: the executor checkpoint-stops the job and
-        re-admits it later."""
+        """Largest group count <= target the job can actually run at (the
+        global batch must divide across the replicas). 0 means full
+        preemption: the executor checkpoint-stops the job and re-admits it
+        later."""
         return feasible_parallelism(self.spec.global_batch, target)
 
     def on_step(self, metrics: dict, now: float):
         if self.start_time is None:
             self.start_time = now
         self.steps_done += 1
-        self.attained_gpu_s += self.alloc * metrics.get("step_time", 0.0)
+        # Tiresias service is DEVICE-seconds (an mp=2 group burns 2x)
+        self.attained_gpu_s += self.devices_held * metrics.get("step_time",
+                                                               0.0)
         self.last_loss = metrics.get("loss")
         self.last_step = metrics.get("step")
 
@@ -170,6 +203,7 @@ class ClusterJob:
             "profile": self.spec.profile,
             "state": self.state.value,
             "requested_p": self.spec.requested_p,
+            "model_parallel": self.spec.model_parallel,
             "steps_done": self.steps_done,
             "attained_gpu_s": round(self.attained_gpu_s, 3),
             "arrival": self.arrival, "start": self.start_time,

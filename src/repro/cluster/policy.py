@@ -1,7 +1,9 @@
 """Pluggable scheduling for the live executor.
 
-A policy is the same callable(view) -> {jid: n_gpus} that drives the
-discrete-event simulator (repro.sched.base). This module supplies
+A policy is the same callable(view) -> {jid: p} that drives the
+discrete-event simulator (repro.sched.base) — ``p`` counted in device
+GROUPS of ``job.mp`` devices each (one data-parallel replica; plain
+tenants have mp=1 so a group is a device). This module supplies
 
   * ``make_policy(name, **kw)`` — registry of the paper's policies with
     defaults tuned for live smoke-scale jobs (quanta in attained GPU-seconds
@@ -30,12 +32,15 @@ from repro.sched.tiresias import Tiresias
 class Action:
     kind: str           # "start" | "scale_out" | "scale_in" | "preempt"
     jid: int
-    target_p: int       # desired parallelism after the action (0 = preempt)
+    target_p: int       # desired GROUP count after the action (0 = preempt)
 
 
 def plan_actions(jobs: dict[int, object], alloc: dict[int, int],
                  n_gpus: int) -> list[Action]:
-    """Diff the policy's target allocation against live job state.
+    """Diff the policy's target allocation (in device groups) against live
+    job state. Targets are clamped to what the job can actually run:
+    batch-divisible group counts that fit the cluster — an mp=2 tenant on
+    an n_gpus=4 pool can never target more than 2 groups.
 
     ``start`` covers both first admission and re-admission of a preempted
     job (the executor restores from the checkpoint handle when one exists).
@@ -46,7 +51,8 @@ def plan_actions(jobs: dict[int, object], alloc: dict[int, int],
         job = jobs.get(jid)
         if job is None or job.finish_time is not None:
             continue
-        target = job.feasible_p(min(target, n_gpus))
+        max_groups = n_gpus // getattr(job, "mp", 1)
+        target = job.feasible_p(min(target, max_groups))
         if job.trainer is None:
             if target > 0:
                 grows.append(Action("start", jid, target))

@@ -42,7 +42,8 @@ class EDLJob:
         if min_p is None and max_p is None:     # running job: report current
             return ProfileTable.from_throughputs(
                 {self.trainer.p: self.trainer.throughput()},
-                batch=getattr(self.trainer, "global_batch", None))
+                batch=getattr(self.trainer, "global_batch", None),
+                group_size=getattr(self.trainer, "model_parallel", 1))
         return _profile(self.trainer, min_p, max_p, **kw)
 
     def migrate(self, n: int = 1):

@@ -400,10 +400,13 @@ class ElasticTrainer:
         immediately; the topology switch commits at a mini-batch boundary."""
         if self.controller.phase is not Phase.IDLE:
             raise Busy("scaling in flight; retry later")
-        n_new = len(new_devices) // self.model_parallel
-        if n_new < 1:
-            raise ValueError(f"need >= {self.model_parallel} devices, "
-                             f"got {len(new_devices)}")
+        n_new, rem = divmod(len(new_devices), self.model_parallel)
+        if n_new < 1 or rem:
+            # a partial group could never host a data-parallel slice of the
+            # (data, model) mesh; refusing keeps grant arithmetic exact
+            raise ValueError(
+                f"grants move whole device groups: got {len(new_devices)} "
+                f"device(s), group size is {self.model_parallel}")
         self.devices = self.devices + list(new_devices)
         try:
             return self._request("scale_out", self.p + n_new, block=block)

@@ -20,9 +20,9 @@ import dataclasses
 
 @dataclasses.dataclass(frozen=True)
 class ProfilePoint:
-    p: int
+    p: int                  # data-parallel replicas (device GROUPS)
     throughput: float       # measured samples/s over the sweep window
-    per_gpu: float          # throughput / p
+    per_gpu: float          # throughput / (p * group_size): per DEVICE
     efficiency: float       # per_gpu normalized by the sweep's best per_gpu
     step_time: float        # seconds per mini-batch (batch / throughput)
 
@@ -48,13 +48,20 @@ class ProfileTable:
 
     @classmethod
     def from_throughputs(cls, thr: dict[int, float],
-                         batch: float | None = None) -> "ProfileTable":
+                         batch: float | None = None,
+                         group_size: int = 1) -> "ProfileTable":
         """Build a table from raw {p: samples/s} measurements (tests,
-        external profilers)."""
-        best = max((t / p for p, t in thr.items() if p > 0), default=1.0)
+        external profilers). ``p`` is in data-parallel replicas;
+        ``group_size`` (the job's model-parallel degree) converts the
+        per-replica numbers to true per-DEVICE throughput. Efficiency is
+        group_size-invariant (the constant cancels in the normalization),
+        so mp=1 tables are bit-identical to the pre-group format."""
+        gs = max(1, int(group_size))
+        best = max((t / (p * gs) for p, t in thr.items() if p > 0),
+                   default=1.0)
         return cls({p: ProfilePoint(
-            p=p, throughput=t, per_gpu=t / p,
-            efficiency=(t / p) / best if best > 0 else 0.0,
+            p=p, throughput=t, per_gpu=t / (p * gs),
+            efficiency=(t / (p * gs)) / best if best > 0 else 0.0,
             step_time=(batch / t) if batch and t > 0 else float("nan"))
             for p, t in thr.items()})
 
@@ -77,6 +84,11 @@ def profile(trainer, min_p: int, max_p: int, *, steps_per_p: int = 10,
     ``on_devices_released`` as they free up — the cluster executor's
     borrowed idle devices flow straight back to its pool. Parallelisms
     that do not divide the trainer's global batch are skipped.
+
+    ``min_p``/``max_p`` and every sweep step are in data-parallel replicas
+    (device groups): on an mp>1 trainer each scale-in step vacates a whole
+    mp-sized group, and the returned table's per-device numbers divide by
+    the group size so mixed-mp curves compare in one unit system.
     """
     if min_p > max_p:
         raise ValueError(f"min_p {min_p} > max_p {max_p}")
@@ -108,4 +120,6 @@ def profile(trainer, min_p: int, max_p: int, *, steps_per_p: int = 10,
     elif trainer.p > p0:
         trainer.scale_in(trainer.p - p0, block=True, release=release)
     batch = getattr(trainer, "global_batch", None)
-    return ProfileTable.from_throughputs(raw, batch=batch)
+    return ProfileTable.from_throughputs(
+        raw, batch=batch,
+        group_size=getattr(trainer, "model_parallel", 1))

@@ -43,30 +43,54 @@ device-conservation verdict as JSON.
   PYTHONPATH=src python -m repro.launch.cluster --devices 4 \
       --workload "trace=philly seed=0 jobs=6 steps=4:10"
 
-Job grammar: ``name=profile:requested_p:total_steps@arrival`` where
-``profile`` names an analytic scaling profile (sched.throughput.PROFILES —
-the ThroughputModel's prior) and ``arrival`` is in scheduling rounds.
+Job grammar: ``name=profile:requested_p:total_steps[:mp=M]@arrival``
+where ``profile`` names an analytic scaling profile
+(sched.throughput.PROFILES — the ThroughputModel's prior), ``arrival`` is
+in scheduling rounds, and the optional ``mp=M`` field makes the tenant
+model-parallel: ``requested_p`` then counts 2-D mesh *device groups* of M
+devices each (one data-parallel replica per group), and the executor
+grants/reclaims whole groups. Example — one mp=2 tenant packing against
+two mp=1 tenants on 4 devices:
+
+  PYTHONPATH=src python -m repro.launch.cluster --devices 4 \
+      --jobs "big=vgg19:1:12:mp=2@0,a=resnet50:1:16@0,b=googlenet:1:10@0"
+
 Alternatively ``--workload`` synthesizes the job list from
 sched.workload's trace generators (keys: trace=philly|synthetic, seed,
-jobs, steps=LO:HI).
+jobs, steps=LO:HI, mp=1:2 — colon-separated model-parallel degrees drawn
+per job for a mixed-mp population).
 """
 import json
 import time
 
 
 def parse_jobs(text: str, *, batch: int, seq: int, n_samples: int,
-               d_partitions: int):
+               d_partitions: int, default_mp: int = 1):
+    """``name=profile:requested_p:total_steps[:mp=M]@arrival`` — fields
+    after the first three are ``key=value`` (extensible); ``mp`` sets the
+    tenant's model-parallel degree (devices per allocation group).
+    ``default_mp`` applies to jobs without an explicit ``mp=`` (the
+    bench's --model-parallel knob)."""
     from repro.cluster.job import JobSpec
     specs = []
     for i, item in enumerate(text.split(",")):
-        name, rest = item.split("=")
+        name, rest = item.split("=", 1)
         body, _, arrival = rest.partition("@")
-        profile, req_p, steps = body.split(":")
+        profile, req_p, steps, *extras = body.split(":")
+        mp = default_mp
+        for extra in extras:
+            key, eq, val = extra.partition("=")
+            if key == "mp" and eq:
+                mp = int(val)
+            else:
+                raise ValueError(
+                    f"job {name!r}: unknown spec field {extra!r} "
+                    f"(supported: mp=M)")
         specs.append(JobSpec(
             name=name.strip(), profile=profile, requested_p=int(req_p),
             total_steps=int(steps), arrival=float(arrival or 0.0),
-            global_batch=batch, seq_len=seq, n_samples=n_samples,
-            d_partitions=d_partitions, seed=i))
+            model_parallel=mp, global_batch=batch, seq_len=seq,
+            n_samples=n_samples, d_partitions=d_partitions, seed=i))
     return specs
 
 
@@ -80,17 +104,21 @@ def parse_workload(text: str, *, devices: int, batch: int, seq: int,
     bad = [t for t in tokens if "=" not in t]
     if bad:
         raise ValueError(f"--workload tokens must be key=value, got {bad}; "
-                         f"keys: trace, seed, jobs, steps")
+                         f"keys: trace, seed, jobs, steps, mp")
     kv = dict(t.split("=", 1) for t in tokens)
     trace = kv.get("trace", "philly")
     seed = int(kv.get("seed", 0))
     n_jobs = int(kv.get("jobs", 6))
     lo, _, hi = kv.get("steps", "4:20").partition(":")
     steps = (int(lo), int(hi or lo))
+    # mp=1:2 — colon-separated model-parallel degrees drawn per trace job
+    mp_choices = tuple(int(m) for m in kv.get("mp", "1").split(":"))
     if trace == "philly":
-        jobs = workload.philly_like(seed=seed, n_jobs=n_jobs)
+        jobs = workload.philly_like(seed=seed, n_jobs=n_jobs,
+                                    mp_choices=mp_choices)
     elif trace == "synthetic":
-        jobs = workload.synthetic_16(seed=seed, n_jobs=n_jobs)
+        jobs = workload.synthetic_16(seed=seed, n_jobs=n_jobs,
+                                     mp_choices=mp_choices)
     else:
         raise ValueError(f"unknown trace {trace!r}; philly or synthetic")
     return workload.to_cluster_specs(
@@ -170,20 +198,21 @@ def main(argv=None):
     print(f"policy={args.policy} model={args.throughput_model} "
           f"devices={ex.n_gpus} "
           f"rounds={stats['rounds']} wall={stats['wall_s']}s")
-    print(f"{'job':>8s} {'profile':>10s} {'req_p':>5s} {'steps':>5s} "
-          f"{'jct':>7s} {'loss':>8s}")
+    print(f"{'job':>8s} {'profile':>10s} {'req_p':>5s} {'mp':>3s} "
+          f"{'steps':>5s} {'jct':>7s} {'loss':>8s}")
     for j in stats["jobs"]:
         jct = f"{j['jct']:.0f}" if j["jct"] is not None else "-"
         loss = (f"{j['final_loss']:.3f}" if j["final_loss"] is not None
                 else "-")
         print(f"{j['name']:>8s} {j['profile']:>10s} "
-              f"{j['requested_p']:>5d} {j['steps_done']:>5d} "
-              f"{jct:>7s} {loss:>8s}")
+              f"{j['requested_p']:>5d} {j['model_parallel']:>3d} "
+              f"{j['steps_done']:>5d} {jct:>7s} {loss:>8s}")
     print("events:")
     for e in stats["events"]:
         loan = f" (loan {e['loaned']})" if e["loaned"] else ""
+        mp = f" x{e['mp']}dev" if e.get("mp", 1) != 1 else ""
         print(f"  round {e['round']:3d}  {e['op']:>9s}  {e['job']:>8s}  "
-              f"p {e['from_p']} -> {e['to_p']}{loan}")
+              f"p {e['from_p']} -> {e['to_p']}{mp}{loan}")
     print(f"device conservation: {'OK' if stats['conserved'] else 'LEAK'}; "
           f"max transient loan: {stats['max_loaned']} device(s); "
           f"preemptions: {stats['preemptions']} "

@@ -1,11 +1,12 @@
 from repro.sched.base import MaxThroughput, StaticPolicy, alive_jobs, \
-    throughput_model_of
+    group_size, throughput_model_of
 from repro.sched.throughput import AnalyticModel, MeasuredModel, \
     ModelProfile, PROFILES, ThroughputModel, throughput
 from repro.sched.simulator import ClusterSimulator, Job
 from repro.sched.tiresias import ElasticTiresias, Tiresias
 
-__all__ = ["StaticPolicy", "alive_jobs", "throughput_model_of",
+__all__ = ["StaticPolicy", "alive_jobs", "group_size",
+           "throughput_model_of",
            "MaxThroughput", "ModelProfile", "PROFILES", "throughput",
            "ThroughputModel", "AnalyticModel", "MeasuredModel",
            "ClusterSimulator", "Job", "Tiresias", "ElasticTiresias"]

@@ -1,10 +1,16 @@
 """The ONE scheduling interface shared by the discrete-event simulator and
 the live cluster executor (repro.cluster.executor).
 
-A *policy* is a callable ``policy(view) -> {jid: n_gpus}`` returning the
-target allocation for every alive job. The ``view`` is anything exposing:
+A *policy* is a callable ``policy(view) -> {jid: p}`` returning the target
+allocation for every alive job. Allocations are counted in **device
+groups** — one group is one data-parallel replica of the job, occupying
+``mp = group_size(job)`` physical devices (the job's model-parallel
+degree). For the common ``mp == 1`` tenant a group IS a device and the map
+reads exactly as before; for an mp>1 tenant a target of ``p`` claims
+``p * mp`` devices. Policies budget in devices, allocate in groups. The
+``view`` is anything exposing:
 
-  view.n_gpus   — cluster size
+  view.n_gpus   — cluster size in DEVICES (the budget policies spend)
   view.now      — monotonically increasing clock (seconds for the simulator,
                   scheduling rounds for the live executor — units only need
                   to be consistent with the policy's time parameters)
@@ -16,11 +22,17 @@ target allocation for every alive job. The ``view`` is anything exposing:
                   get a shared AnalyticModel via ``throughput_model_of``)
 
 and each job exposing: ``jid, model, requested_p, arrival, inelastic,
-attained_gpu_s, alloc, start_time, finish_time``. ``model`` names an
-analytic profile the ThroughputModel can use as prior; policies never
-query curves directly — all throughput reasoning goes through the view's
-model, so a live executor scheduling from MEASURED curves and the
-simulator scheduling from analytic ones run the identical policy code.
+attained_gpu_s, alloc, start_time, finish_time`` — ``requested_p`` and
+``alloc`` in groups (data-parallel replicas) — plus optionally ``mp``
+(devices per group; absent means 1, see ``group_size``).
+``attained_gpu_s`` stays in device-seconds: an mp=2 tenant consumes service
+twice as fast as an mp=1 tenant at the same group count, which is exactly
+how Tiresias should see it. ``model`` names an analytic profile the
+ThroughputModel can use as prior; policies never query curves directly —
+all throughput reasoning goes through the view's model (whose ``p``
+argument is likewise in data-parallel replicas), so a live executor
+scheduling from MEASURED curves and the simulator scheduling from analytic
+ones run the identical policy code.
 
 Both ``repro.sched.simulator.Job`` and ``repro.cluster.job.ClusterJob``
 satisfy this, so Tiresias / Elastic-Tiresias / MaxThroughput / StaticPolicy
@@ -39,6 +51,13 @@ from __future__ import annotations
 from repro.sched.throughput import default_model
 
 
+def group_size(job) -> int:
+    """Devices per allocation grant: the job's model-parallel degree.
+    Jobs that predate the device-group refactor (plain test stand-ins)
+    simply have no ``mp`` attribute and allocate single devices."""
+    return int(getattr(job, "mp", 1) or 1)
+
+
 def throughput_model_of(view):
     """The ThroughputModel the view's owner schedules with. Views that
     predate the seam (plain stand-ins in tests) fall back to the shared
@@ -54,9 +73,10 @@ def alive_jobs(view) -> list:
 
 
 class StaticPolicy:
-    """Non-elastic baseline: FIFO admission at exactly ``requested_p``;
-    running jobs are never resized (EDL §4.3's static-allocation strawman
-    at the cluster level)."""
+    """Non-elastic baseline: FIFO admission at exactly ``requested_p``
+    groups; running jobs are never resized (EDL §4.3's static-allocation
+    strawman at the cluster level). An mp>1 job is admitted only when
+    ``requested_p * mp`` devices are free."""
 
     def __call__(self, view) -> dict[int, int]:
         alloc: dict[int, int] = {}
@@ -64,22 +84,29 @@ class StaticPolicy:
         for j in sorted(alive_jobs(view), key=lambda j: j.arrival):
             if j.alloc > 0:                 # keep whatever it has
                 alloc[j.jid] = j.alloc
-                free -= j.alloc
+                free -= j.alloc * group_size(j)
         for j in sorted(alive_jobs(view), key=lambda j: j.arrival):
             if j.alloc == 0:
-                take = j.requested_p if free >= j.requested_p else 0
+                need = j.requested_p * group_size(j)
+                take = j.requested_p if free >= need else 0
                 alloc[j.jid] = take
-                free -= take
+                free -= take * group_size(j)
         return alloc
 
 
 class MaxThroughput:
     """Throughput-maximizing allocator (water-filling over marginal gains).
 
-    Admission floor first — alive jobs in arrival order get 1 GPU each
-    (inelastic jobs: exactly ``requested_p`` or nothing) — then every
-    remaining GPU goes to the elastic job with the largest marginal
-    throughput gain, while that gain exceeds ``min_gain`` samples/s.
+    Admission floor first — alive jobs in arrival order get 1 group each
+    (inelastic jobs: exactly ``requested_p`` groups or nothing) — then the
+    remaining device budget goes, one group at a time, to the elastic job
+    with the largest marginal throughput gain **per device**, while that
+    gain exceeds ``min_gain`` samples/s/device. Dividing the marginal gain
+    by ``group_size(job)`` is what packs mixed-mp tenants correctly: an
+    mp=2 tenant's extra replica must beat TWO single-device grants to
+    mp=1 competitors before it wins the budget, and a tenant whose group
+    no longer fits in the leftover devices simply drops out of the
+    water-filling round.
     Alive includes preempted-and-parked jobs (they sit in ``view.pending``),
     so a checkpointed tenant re-enters through the same admission floor as
     a fresh arrival; a floor that no longer fits emits 0 — a real
@@ -100,30 +127,31 @@ class MaxThroughput:
 
     def __init__(self, *, min_gain: float = 0.0, max_per_job: int | None = None):
         self.min_gain = min_gain
-        self.max_per_job = max_per_job
+        self.max_per_job = max_per_job      # cap in groups per job
 
     def __call__(self, view) -> dict[int, int]:
         tm = throughput_model_of(view)
         jobs = sorted(alive_jobs(view), key=lambda j: (j.arrival, j.jid))
         alloc: dict[int, int] = {}
-        free = view.n_gpus
+        free = view.n_gpus                  # device budget
         for j in jobs:
-            need = j.requested_p if j.inelastic else 1
-            take = need if free >= need else 0
+            groups = j.requested_p if j.inelastic else 1
+            need = groups * group_size(j)
+            take = groups if free >= need else 0
             alloc[j.jid] = take
-            free -= take
+            free -= take * group_size(j)
         cap = self.max_per_job or view.n_gpus
         while free > 0:
             best, best_gain = None, self.min_gain
             for j in jobs:
-                p = alloc[j.jid]
-                if p == 0 or p >= cap or j.inelastic:
+                p, mp = alloc[j.jid], group_size(j)
+                if p == 0 or p >= cap or j.inelastic or mp > free:
                     continue
-                gain = tm.throughput(j, p + 1) - tm.throughput(j, p)
+                gain = (tm.throughput(j, p + 1) - tm.throughput(j, p)) / mp
                 if gain > best_gain:
                     best, best_gain = j, gain
             if best is None:
                 break
             alloc[best.jid] += 1
-            free -= 1
+            free -= group_size(best)
         return alloc

@@ -1,7 +1,11 @@
 """Discrete-event multi-tenant GPU cluster simulator.
 
-Jobs demand ``total_samples`` of work; a job allocated p GPUs progresses at
-``throughput(model, p)`` samples/s. Parallelism changes cost:
+Jobs demand ``total_samples`` of work; a job allocated p device groups
+(data-parallel replicas of ``mp`` devices each — ``mp=1`` for plain
+data-parallel tenants) progresses at ``throughput(model, p)`` samples/s.
+The cluster size ``n_gpus`` and attained service are in devices; policies
+(sched.base) convert between the two via ``group_size``. Parallelism
+changes cost:
 
   * EDL            — stop-free: existing GPUs lose only ``edl_stop_s``
                      (default 0.5 s); newly added GPUs additionally pay
@@ -28,12 +32,13 @@ from repro.sched.throughput import AnalyticModel, ThroughputModel
 class Job:
     jid: int
     model: str
-    requested_p: int
+    requested_p: int        # in device GROUPS (data-parallel replicas)
     total_samples: float
     arrival: float
     inelastic: bool = False
+    mp: int = 1             # devices per group (model-parallel degree)
     # runtime state
-    alloc: int = 0
+    alloc: int = 0          # groups currently held
     remaining: float = 0.0
     attained_gpu_s: float = 0.0     # Tiresias service metric
     start_time: float | None = None
@@ -90,14 +95,16 @@ class ClusterSimulator:
             if j.alloc > 0 and eff_dt > 0:
                 j.remaining -= \
                     self.throughput_model.throughput(j, j.alloc) * eff_dt
-            j.attained_gpu_s += j.alloc * dt
-        used = sum(j.alloc for j in self.running.values())
+            # service is device-seconds: an mp=2 group burns 2 GPU·s per s
+            j.attained_gpu_s += j.alloc * j.mp * dt
+        used = sum(j.alloc * j.mp for j in self.running.values())
         eff = sum(self._job_eff(j) for j in self.running.values())
         self.utilization_log.append((self.now, used, eff))
 
     def _job_eff(self, j: Job) -> float:
+        """Effective DEVICES delivering work (utilization log units)."""
         tm = self.throughput_model
-        return j.alloc * tm.efficiency(j, j.alloc) if j.alloc else 0.0
+        return j.alloc * j.mp * tm.efficiency(j, j.alloc) if j.alloc else 0.0
 
     def _apply_alloc(self, new_alloc: dict[int, int]):
         for jid, p in new_alloc.items():

@@ -1,6 +1,14 @@
 """Pluggable throughput models t(p) — the ONE seam every scheduling layer
 queries for "how fast does this job run at parallelism p?".
 
+``p`` is ALWAYS counted in data-parallel replicas (device groups), never
+raw devices: an mp=2 tenant at p=2 runs 2 replicas on 4 devices, and both
+its analytic prior and its measured curve are functions of the replica
+count — which is what the live trainer's ``trainer.p`` reports and what
+``observe``/``ingest`` feed back. Policies that need the device cost of a
+replica multiply by ``sched.base.group_size(job)`` themselves; the model
+stays blind to packing.
+
 Policies (MaxThroughput water-filling, Elastic-Tiresias marginal gain), the
 discrete-event simulator, and workload generators all consume a
 ``ThroughputModel`` instead of hard-coded curves:

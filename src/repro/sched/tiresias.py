@@ -8,12 +8,23 @@ executor that is a real checkpoint-stop preemption (demotion to the queue),
 not a clamp; the parked job keeps its attained service and is re-admitted
 from the saved state once it wins GPUs again.
 
+Allocations are in device GROUPS (sched.base: one group = one
+data-parallel replica = ``group_size(job)`` devices), budgets in devices:
+admitting an mp=2 tenant at ``requested_p`` groups spends ``2 *
+requested_p`` devices, compaction frees ``mp`` devices per group removed
+from a donor, and expansion grants a group only while it still fits the
+idle-device budget. ``attained_gpu_s`` is device-seconds, so an mp=2
+tenant burns through its quanta twice as fast as an mp=1 tenant at equal
+group count — big tenants demote sooner, exactly as Tiresias intends.
+
 Elastic-Tiresias adds two rules:
   R1 Compaction — when > N jobs wait, scale running jobs in (never below
-     ceil(r * requested_p), never jobs in G0) to free GPUs for the head of
-     the queue, choosing removals that maximize the GPU-efficiency gain.
-  R2 Expansion — when GPUs idle and nothing waits, greedily give +1 GPU to
-     the job with the largest marginal throughput gain, while positive.
+     ceil(r * requested_p) groups, never jobs in G0) to free GPUs for the
+     head of the queue, choosing removals that maximize the GPU-efficiency
+     gain.
+  R2 Expansion — when GPUs idle and nothing waits, greedily give +1 group
+     to the job with the largest marginal throughput gain per device,
+     while positive.
 
 Policies take a *view* (repro.sched.base): the discrete-event simulator and
 the live multi-tenant executor expose the same interface, so the identical
@@ -26,7 +37,7 @@ from __future__ import annotations
 
 import math
 
-from repro.sched.base import alive_jobs, throughput_model_of
+from repro.sched.base import alive_jobs, group_size, throughput_model_of
 
 
 class Tiresias:
@@ -62,9 +73,10 @@ class Tiresias:
         free = view.n_gpus
         waiting = []
         for j in jobs:
-            if free >= j.requested_p:
+            need = j.requested_p * group_size(j)
+            if free >= need:
                 alloc[j.jid] = j.requested_p
-                free -= j.requested_p
+                free -= need
             else:
                 alloc[j.jid] = 0
                 waiting.append(j)
@@ -80,6 +92,7 @@ class Tiresias:
         if len(waiting) <= self.N:
             return alloc, free
         for pending in list(waiting):
+            need = pending.requested_p * group_size(pending)   # in devices
             # scan running jobs (lowest priority first), shrink until the
             # pending job fits; respect G0-protection and the QoS floor.
             donors = sorted(
@@ -88,19 +101,20 @@ class Tiresias:
                 key=lambda j: -self.group_of(j))
             for d in donors:
                 floor = max(1, math.ceil(self.r * d.requested_p))
-                while alloc[d.jid] > floor and free < pending.requested_p:
-                    # remove the GPU whose removal gains the most efficiency
+                while alloc[d.jid] > floor and free < need:
+                    # remove the group whose removal gains the most
+                    # efficiency (one group = group_size(d) devices)
                     p = alloc[d.jid]
                     gain = tm.efficiency(d, p - 1) - tm.efficiency(d, p)
                     if gain < 0 and free > 0:
                         break   # shrinking would hurt; try next donor
                     alloc[d.jid] -= 1
-                    free += 1
-                if free >= pending.requested_p:
+                    free += group_size(d)
+                if free >= need:
                     break
-            if free >= pending.requested_p:
+            if free >= need:
                 alloc[pending.jid] = pending.requested_p
-                free -= pending.requested_p
+                free -= need
                 waiting.remove(pending)
         return alloc, free
 
@@ -111,17 +125,19 @@ class Tiresias:
         while free > 0:
             best, best_gain = None, 0.0
             for j in jobs:
-                p = alloc.get(j.jid, 0)
-                if p == 0 or j.inelastic:
+                p, mp = alloc.get(j.jid, 0), group_size(j)
+                if p == 0 or j.inelastic or mp > free:
                     continue
                 s_p = tm.throughput(j, p)
-                gain = (tm.throughput(j, p + 1) - s_p) / s_p
+                # relative gain per DEVICE: an mp=2 group must out-gain two
+                # single-device grants before it wins the idle budget
+                gain = (tm.throughput(j, p + 1) - s_p) / s_p / mp
                 if gain > best_gain:
                     best, best_gain = j, gain
             if best is None:
                 break
             alloc[best.jid] += 1
-            free -= 1
+            free -= group_size(best)
         return alloc
 
 

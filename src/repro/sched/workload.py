@@ -16,6 +16,12 @@
 Job sizing uses the same pluggable ThroughputModel the schedulers consume
 (``model=`` parameter; default analytic), so a workload scaled for an
 analytic t(p) and the policies scheduling it agree on units.
+
+Both generators take ``mp_choices`` — a tuple of model-parallel degrees
+drawn per job — to synthesize MIXED-mp tenant populations (the
+multi-dimensional packing scenario): with ``mp_choices=(1, 2)`` roughly
+half the tenants demand 2-device groups, and ``to_cluster_specs`` carries
+the drawn mp onto the live ``JobSpec.model_parallel``.
 """
 from __future__ import annotations
 
@@ -28,7 +34,7 @@ MODELS = list(PROFILES)
 
 
 def synthetic_16(*, seed: int = 0, n_jobs: int = 16, interval: float = 30.0,
-                 default_p: int = 4,
+                 default_p: int = 4, mp_choices: tuple[int, ...] = (1,),
                  model: ThroughputModel | None = None) -> list[Job]:
     tm = model or default_model()
     rng = np.random.default_rng(seed)
@@ -37,11 +43,17 @@ def synthetic_16(*, seed: int = 0, n_jobs: int = 16, interval: float = 30.0,
         name = MODELS[rng.integers(len(MODELS))]
         # ~6 minutes of work at the default parallelism
         samples = tm.throughput(name, default_p) * rng.uniform(240, 480)
-        jobs.append(Job(i, name, default_p, samples, arrival=i * interval))
+        # no rng draw for the single-choice default: the golden simulator
+        # regressions pin the pre-group random stream bit-for-bit
+        mp = int(mp_choices[rng.integers(len(mp_choices))]
+                 if len(mp_choices) > 1 else mp_choices[0])
+        jobs.append(Job(i, name, default_p, samples, arrival=i * interval,
+                        mp=mp))
     return jobs
 
 
 def philly_like(*, seed: int = 0, n_jobs: int = 400, mean_iat: float = 18.0,
+                mp_choices: tuple[int, ...] = (1,),
                 model: ThroughputModel | None = None) -> list[Job]:
     tm = model or default_model()
     rng = np.random.default_rng(seed)
@@ -58,7 +70,9 @@ def philly_like(*, seed: int = 0, n_jobs: int = 400, mean_iat: float = 18.0,
                            p=[.3, .15, .1, .15, .1, .08, .06, .04, .02]))
         name = MODELS[rng.integers(len(MODELS))]
         samples = tm.throughput(name, p) * (gpu_seconds / p)
-        jobs.append(Job(i, name, p, samples, arrival=t))
+        mp = int(mp_choices[rng.integers(len(mp_choices))]
+                 if len(mp_choices) > 1 else mp_choices[0])
+        jobs.append(Job(i, name, p, samples, arrival=t, mp=mp))
     return jobs
 
 
@@ -75,6 +89,11 @@ def to_cluster_specs(jobs: list[Job], *, devices: int = 4, batch: int = 12,
     rounds (``arrival_scale`` trace-seconds per round; default spreads the
     trace over ~2 rounds per job), and requested parallelism is clipped to
     the device pool and the global-batch divisibility the trainer enforces.
+
+    A trace job's model-parallel degree (``Job.mp``) survives onto the
+    spec: the requested GROUP count is clipped so ``p * mp`` fits the
+    pool, and an mp too large for the pool degrades to 1 (the tenant runs
+    data-parallel rather than being unrunnable).
     """
     from repro.cluster.job import JobSpec, feasible_parallelism
     tm = model or default_model()
@@ -91,12 +110,14 @@ def to_cluster_specs(jobs: list[Job], *, devices: int = 4, batch: int = 12,
     specs = []
     for j, ls in zip(jobs, lsvc):
         z = 0.0 if lmax <= lmin else (float(ls) - lmin) / (lmax - lmin)
+        mp = j.mp if 1 <= j.mp <= devices else 1
         specs.append(JobSpec(
             name=f"j{j.jid}", profile=j.model,
             requested_p=feasible_parallelism(
-                batch, max(1, min(j.requested_p, devices))),
+                batch, max(1, min(j.requested_p, devices // mp))),
             total_steps=int(round(lo + z * (hi - lo))),
             arrival=round(float(j.arrival - t0) / arrival_scale, 2),
-            inelastic=j.inelastic, global_batch=batch, seq_len=seq_len,
-            n_samples=n_samples, d_partitions=d_partitions, seed=j.jid))
+            inelastic=j.inelastic, model_parallel=mp, global_batch=batch,
+            seq_len=seq_len, n_samples=n_samples,
+            d_partitions=d_partitions, seed=j.jid))
     return specs

@@ -40,12 +40,16 @@ class FakeTrainer:
     via ``step_time_fn`` to fake jobs whose REAL scaling contradicts their
     analytic prior). Owns ``devices``; ``p`` tracks active slices
     separately so a plain scale-in parks devices in the pool (like the
-    real trainer) while ``release=True`` hands them back."""
+    real trainer) while ``release=True`` hands them back. Group-aware like
+    the real trainer: one slice = ``model_parallel`` devices, and grants
+    must move whole groups."""
 
     def __init__(self, spec, devices):
         self.spec = spec
+        self.model_parallel = getattr(spec, "model_parallel", 1)
+        assert len(devices) % self.model_parallel == 0
         self.devices = list(devices)
-        self._p = len(self.devices)
+        self._p = len(self.devices) // self.model_parallel
         self.controller = _Controller()
         self.injected_delay = {}
         self._flagged_stragglers = []
@@ -79,13 +83,16 @@ class FakeTrainer:
         return m
 
     def grant_devices(self, devs, *, block=False):
+        assert len(devs) % self.model_parallel == 0, \
+            "grants move whole device groups"
         self.devices.extend(devs)
-        self._p = len(self.devices)
+        self._p = len(self.devices) // self.model_parallel
 
     def release_devices(self, n, *, victims=None, block=False):
         assert n < self.p, "cannot release below one slice"
-        freed, self.devices = self.devices[-n:], self.devices[:-n]
-        self._p = min(self._p, len(self.devices))
+        k = n * self.model_parallel
+        freed, self.devices = self.devices[-k:], self.devices[:-k]
+        self._p = min(self._p, len(self.devices) // self.model_parallel)
         if self.on_devices_released:
             self.on_devices_released(self, freed)
 
@@ -98,7 +105,8 @@ class FakeTrainer:
             self._p -= n            # devices stay parked in the pool
 
     def scale_out(self, n=1, *, block=False):
-        assert self._p + n <= len(self.devices), "no devices in the pool"
+        assert self._p + n <= len(self.devices) // self.model_parallel, \
+            "no devices in the pool"
         self._p += n
 
     def wait_for_scaling(self, max_steps=10_000):
@@ -473,6 +481,157 @@ def test_plan_actions_respects_batch_divisibility():
     assert acts[0].target_p == 4
 
 
+# ------------------------------- device groups (model-parallel tenants)
+def test_mixed_mp_canonical_packing():
+    """The canonical mixed-mp scenario: a 4-GPU mp=2 tenant competing with
+    four mp=1 tenants on an 8-device pool. Policies count groups, the pool
+    counts devices — everyone is admitted, every grant to the mp=2 tenant
+    moves a whole 2-device group, and conservation holds in devices."""
+    specs = [JobSpec("big", 2, 40, profile="resnet50", model_parallel=2),
+             *(JobSpec(f"s{i}", 1, 40, profile="googlenet")
+               for i in range(4))]
+    ex = ClusterExecutor(specs, MaxThroughput(), devices=list(range(8)),
+                         resched_every=2, trainer_factory=FakeTrainer,
+                         checkpointer=FakeCheckpointer())
+    ex.run(max_rounds=8)
+    big = ex.jobs[0]
+    assert big.alloc >= 1 and big.devices_held == 2 * big.alloc, \
+        "the mp=2 tenant holds exactly 2 devices per replica"
+    assert all(ex.jobs[i].alloc >= 1 for i in range(1, 5)), \
+        "every mp=1 tenant is admitted alongside the group tenant"
+    for e in ex.events:
+        if e["jid"] == 0 and "devices" in e:
+            assert len(e["devices"]) % 2 == 0, \
+                f"group tenant moved a partial group: {e}"
+    ex._assert_conserved()
+
+
+def test_mixed_mp_loan_reclaim_conserves_devices():
+    """Transient loans in group units: the mp=2 tenant is loaned a whole
+    extra group (2 devices at once) beyond its requested 1; the reclaim
+    releases the same whole group, which then funds an mp=1 grant."""
+    pol = ScriptedPolicy({2: {0: 2, 1: 1},    # loan big a 2nd group
+                          6: {0: 1, 1: 3}})   # reclaim funds s0's growth
+    specs = [JobSpec("big", 1, 60, profile="resnet50", model_parallel=2),
+             JobSpec("s0", 1, 60, profile="googlenet")]
+    ex = ClusterExecutor(specs, pol, devices=list(range(5)),
+                         resched_every=2, trainer_factory=FakeTrainer,
+                         checkpointer=FakeCheckpointer())
+    ex.run(max_rounds=10)
+    loan = [e for e in _find(ex.events, "scale_out", "big")
+            if e["from_p"] == 1]
+    assert loan and len(loan[0]["devices"]) == 2 and loan[0]["mp"] == 2, \
+        "the loan arrives as one whole 2-device group"
+    assert loan[0]["loaned"] == 1, "loaned counts GROUPS beyond requested"
+    reclaim = _find(ex.events, "scale_in", "big")
+    assert reclaim and len(reclaim[0]["devices"]) == 2, \
+        "the reclaim frees the whole group at once"
+    assert ex.jobs[1].alloc == 3, "the freed group funds the mp=1 grant"
+    assert ex.jobs[0].devices_held == 2
+    ex._assert_conserved()
+
+
+def test_mixed_mp_preempt_readmit_holds_group_devices():
+    """Preemption with mp=2: while the checkpoint save is in flight the
+    job's whole GROUP (2 devices, 1 replica) stays accounted to it; the
+    landed save frees both devices, and re-admission lands on a whole
+    group with the step counter intact."""
+    ck = FakeCheckpointer()
+    ck.hold = True
+    pol = ScriptedPolicy({2: {0: 0, 1: 2},    # preempt big, grow s
+                          6: {0: 1, 1: 1}})   # shrink s, re-admit big
+    specs = [JobSpec("big", 1, 30, profile="resnet50", model_parallel=2),
+             JobSpec("s", 1, 30, profile="googlenet")]
+    ex = ClusterExecutor(specs, pol, devices=list(range(3)),
+                         resched_every=2, trainer_factory=FakeTrainer,
+                         checkpointer=ck)
+    ex.run(max_rounds=4)
+    big = ex.jobs[0]
+    assert big.state is JobState.CHECKPOINTING
+    assert big.devices_held == 2 and big.alloc == 1, \
+        "the whole in-flight group counts against the checkpointing job"
+    assert len(ex.free) == 0
+    ex._assert_conserved()
+    ck.hold = False                 # the save lands
+    ex.run(max_rounds=40)
+    pre = _find(ex.events, "preempt", "big")
+    re_ = _find(ex.events, "readmit", "big")
+    assert pre and len(pre[0]["devices"]) == 2, \
+        "landing the save frees BOTH group devices"
+    assert re_ and len(re_[0]["devices"]) == 2 and re_[0]["to_p"] == 1, \
+        "re-admission grants one whole group"
+    steps = [m["step"] for m in big.trainer.metrics_log]
+    assert steps == list(range(steps[0], steps[0] + len(steps))), \
+        "step counter continues across the group preempt round trip"
+    ex._assert_conserved()
+
+
+def test_plan_actions_clamps_mp_target_to_device_capacity():
+    """A policy target of 3 groups for an mp=2 tenant on a 4-device pool
+    is clamped to the 2 groups that physically fit."""
+    j = ClusterJob(0, JobSpec("big", 1, 10, global_batch=12,
+                              model_parallel=2))
+    j.trainer = FakeTrainer(j.spec, [0, 1])
+    acts = plan_actions({0: j}, {0: 3}, 4)
+    assert acts[0].target_p == 2
+
+
+def test_parse_jobs_mp_grammar():
+    """Spec grammar: ``name=profile:p:steps[:mp=M]@arrival``."""
+    from repro.launch.cluster import parse_jobs
+    kw = dict(batch=12, seq=64, n_samples=1 << 10, d_partitions=16)
+    specs = parse_jobs("big=vgg19:1:12:mp=2@3,a=resnet50:2:8@0", **kw)
+    assert specs[0].model_parallel == 2 and specs[0].arrival == 3.0
+    assert specs[0].requested_p == 1
+    assert specs[1].model_parallel == 1, "mp defaults to 1"
+    with pytest.raises(ValueError, match="unknown spec field"):
+        parse_jobs("a=resnet50:1:8:zz=3@0", **kw)
+    with pytest.raises(ValueError, match="model_parallel"):
+        parse_jobs("a=resnet50:1:8:mp=0@0", **kw)
+    assert parse_jobs("a=resnet50:2:8@0", default_mp=2,
+                      **kw)[0].model_parallel == 2
+
+
+def test_executor_rejects_infeasible_mp():
+    """An mp no pool group can ever satisfy is a configuration error, not
+    a job that silently queues forever."""
+    with pytest.raises(ValueError, match="infeasible"):
+        ClusterExecutor([JobSpec("big", 1, 10, model_parallel=8)],
+                        make_policy("static"), devices=list(range(4)),
+                        trainer_factory=FakeTrainer)
+
+
+def test_profile_sweep_steps_by_groups():
+    """profile() on an mp=2 trainer: the sweep steps whole groups and the
+    table's per_gpu column is per DEVICE (throughput / (p * mp))."""
+    tr = FakeTrainer(JobSpec("big", 2, 60, profile="resnet50",
+                             model_parallel=2), [0, 1, 2, 3])
+    table = profile(tr, 1, 2, steps_per_p=2)
+    assert sorted(table.entries) == [1, 2]
+    assert table[2].per_gpu == pytest.approx(table[2].throughput / 4)
+    assert tr.p == 2 and len(tr.devices) == 4, \
+        "trainer restored with all group devices"
+
+
+def test_executor_profile_sweep_borrows_whole_groups():
+    """Opt-in sweep on an mp=2 tenant: idle devices are borrowed two at a
+    time, the measured curve lands, and every device comes home."""
+    mm = MeasuredModel()
+    ex = ClusterExecutor(
+        [JobSpec("big", 1, 40, profile="resnet50", model_parallel=2)],
+        make_policy("static"), devices=list(range(6)),
+        trainer_factory=FakeTrainer, checkpointer=FakeCheckpointer(),
+        throughput_model=mm, profile_sweeps=True)
+    ex.run(max_rounds=6)
+    job = ex.jobs[0]
+    assert {2, 3} <= set(mm.curve(job)), \
+        "the sweep visits every group count the idle pool allowed"
+    assert job.alloc == 1 and job.devices_held == 2 and len(ex.free) == 4
+    prof = [e for e in ex.events if e["op"] == "profile"]
+    assert prof and prof[0]["from_p"] == 3 and prof[0]["to_p"] == 1
+    ex._assert_conserved()
+
+
 # ------------------------------------------- profiling sweeps (EDL §5.2)
 def test_profile_restores_parallelism_and_returns_table():
     """Bugfix regression: profile() used to leave the trainer parked at
@@ -596,6 +755,12 @@ def test_parse_workload_synthesizes_live_specs():
     assert all(4 <= s.total_steps <= 8 for s in specs)
     assert all(12 % s.requested_p == 0 and s.requested_p <= 4
                for s in specs)
+    # mp=1:2 draws a mixed-mp population; groups still fit the pool
+    mixed = parse_workload("trace=philly seed=1 jobs=8 steps=4:8 mp=1:2",
+                           devices=4, batch=12, seq=64, n_samples=1 << 10,
+                           d_partitions=16)
+    assert {s.model_parallel for s in mixed} == {1, 2}
+    assert all(s.requested_p * s.model_parallel <= 4 for s in mixed)
     with pytest.raises(ValueError):
         parse_workload("trace=nope", devices=4, batch=12, seq=64,
                        n_samples=1 << 10, d_partitions=16)
@@ -738,6 +903,39 @@ def test_bench_smoke_cluster_under_both_models(model):
                          cwd=ROOT, timeout=900)
     assert out.returncode == 0, out.stderr[-3000:]
     assert f"cluster_throughput_{model}," in out.stdout
+
+
+@pytest.mark.slow
+def test_live_cluster_mixed_mp_tenants_conserve_device_groups():
+    """Acceptance: one mp=2 tenant (2-D data x model mesh) and two mp=1
+    tenants share a 4-device pool under the throughput policy. All three
+    run stop-free to completion, every device movement of the group
+    tenant is a whole 2-device group, per-round device conservation held
+    (the run would have died on the executor's assert otherwise), and the
+    group tenant scales live at least once."""
+    s = run_cluster_driver(
+        "--policy", "throughput",
+        "--jobs", "big=vgg19:1:20:mp=2@0,a=resnet50:1:8@0,"
+                  "b=googlenet:1:6@0",
+        timeout=1200)
+    assert s["conserved"] is True
+    assert s["finished"] == 3, s["jobs"]
+    big = [j for j in s["jobs"] if j["name"] == "big"][0]
+    assert big["model_parallel"] == 2
+    for j in s["jobs"]:
+        assert j["final_loss"] is not None, "all three trained for real"
+    big_ev = [e for e in s["events"] if e["job"] == "big"]
+    assert all(e["mp"] == 2 for e in big_ev)
+    for e in big_ev:
+        if "devices" in e:
+            assert len(e["devices"]) % 2 == 0, \
+                f"group tenant moved a partial group: {e}"
+            assert len(e["devices"]) == 2 * abs(e["to_p"] - e["from_p"]) \
+                or e["op"] == "finish", e
+    resizes = [e for e in big_ev
+               if e["op"] == "scale_out" and e["from_p"] > 0
+               or e["op"] == "scale_in"]
+    assert resizes, "the mp=2 tenant must scale live (whole groups)"
 
 
 @pytest.mark.slow

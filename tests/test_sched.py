@@ -159,6 +159,118 @@ def test_measured_model_flips_max_throughput_water_filling():
         "measured curves must flip the water-filling decision"
 
 
+# --------------------------- device groups (model-parallel tenants)
+def test_max_throughput_budgets_devices_not_groups():
+    """An mp=2 tenant's marginal replica costs 2 devices: it cannot take a
+    single leftover device, and its gain is compared per DEVICE."""
+    class _View:
+        n_gpus = 4
+        now = 0.0
+        pending = []
+
+        def __init__(self, jobs, model):
+            self.running = {j.jid: j for j in jobs}
+            self.throughput_model = model
+
+    def mk(jid, name, req, mp=1):
+        j = _FakeJob(jid, name)
+        j.requested_p, j.arrival, j.inelastic, j.mp = req, 0.0, False, mp
+        j.alloc, j.attained_gpu_s = req, 0.0
+        j.start_time, j.finish_time = 0.0, None
+        return j
+
+    # floors take 3 devices (2 for the group tenant); the 1 leftover
+    # device cannot host an mp=2 replica, so the mp=1 tenant wins it
+    # regardless of gains
+    big, small = mk(0, "resnet50", 1, mp=2), mk(1, "vgg19", 1)
+    alloc = MaxThroughput()(_View([big, small], AnalyticModel()))
+    assert alloc == {0: 1, 1: 2}, \
+        "the leftover single device must go to the mp=1 tenant"
+
+    # 5-device pool, 2 leftover: the linear-scaling mp=2 tenant's gain per
+    # device beats the flat mp=1 tenant, so the whole group is granted
+    class _View5(_View):
+        n_gpus = 5
+    mm = MeasuredModel()
+    from repro.core.profiling import ProfileTable
+    mm.ingest(big, ProfileTable.from_throughputs(
+        {p: 100.0 * p for p in (1, 2, 3)}, batch=12, group_size=2))
+    mm.ingest(small, ProfileTable.from_throughputs(
+        {p: 240.0 for p in (1, 2, 3)}, batch=12))
+    alloc = MaxThroughput()(_View5([big, small], mm))
+    assert alloc == {0: 2, 1: 1}, \
+        "a whole group goes to the better per-device scaler"
+
+
+def test_tiresias_admission_and_compaction_count_devices():
+    """Tiresias admits ``requested_p * mp`` devices at a time and R1
+    compaction frees mp devices per group removed from a donor."""
+    from repro.sched.base import group_size
+    from repro.sched.simulator import Job as SimJob
+    big = SimJob(0, "resnet50", 2, 1e5, 0.0, mp=2)     # needs 4 devices
+    small = SimJob(1, "googlenet", 2, 1e5, 0.0)        # needs 2
+    assert group_size(big) == 2 and group_size(small) == 1
+
+    class _View:
+        n_gpus = 5
+        now = 0.0
+        throughput_model = AnalyticModel()
+
+        def __init__(self, jobs):
+            self.running = {}
+            self.pending = list(jobs)
+
+    alloc = Tiresias()(_View([big, small]))
+    assert alloc == {0: 2, 1: 0}, \
+        "after the 4-device group admission only 1 device remains — too " \
+        "few for the mp=1 job's 2 groups"
+
+
+def test_simulator_mixed_mp_capacity_in_devices():
+    """Mixed-mp tenants through the discrete-event simulator: every
+    allocation the policy emits fits the DEVICE capacity (sum of
+    groups x mp), and all jobs finish."""
+    am = AnalyticModel()
+    jobs = [Job(0, "resnet50", 2, am.throughput("resnet50", 2) * 400,
+                0.0, mp=2),
+            Job(1, "googlenet", 2, am.throughput("googlenet", 2) * 300,
+                0.0),
+            Job(2, "alexnet", 1, am.throughput("alexnet", 1) * 200, 30.0),
+            Job(3, "vgg19", 2, am.throughput("vgg19", 2) * 400, 60.0,
+                mp=2)]
+    sim = ClusterSimulator(8, jobs, ElasticTiresias(N=0),
+                           costs=ScalingCosts(mode="edl"))
+    orig = sim._apply_alloc
+
+    def checked(alloc):
+        used = sum(p * sim.jobs[jid].mp for jid, p in alloc.items())
+        assert used <= sim.n_gpus, f"device over-allocation: {used}"
+        orig(alloc)
+
+    sim._apply_alloc = checked
+    stats = sim.run()
+    assert stats["finished"] == 4
+    # service is device-seconds: the mp=2 tenant accrued it 2x per group
+    assert jobs[0].attained_gpu_s > 0
+
+
+def test_workload_mixed_mp_specs_fit_pool():
+    """mp_choices synthesizes a mixed-mp population and to_cluster_specs
+    keeps every spec group-feasible for the live pool."""
+    jobs = philly_like(seed=2, n_jobs=12, mp_choices=(1, 2))
+    assert {j.mp for j in jobs} == {1, 2}, "both degrees must be drawn"
+    specs = to_cluster_specs(jobs, devices=4, batch=12, steps=(4, 8))
+    assert any(s.model_parallel == 2 for s in specs)
+    assert all(s.requested_p * s.model_parallel <= 4 for s in specs)
+    assert all(12 % s.requested_p == 0 for s in specs)
+    # an mp the pool can never host degrades to data-parallel, not to an
+    # unrunnable spec
+    degraded = to_cluster_specs(philly_like(seed=2, n_jobs=4,
+                                            mp_choices=(8,)),
+                                devices=4, batch=12, steps=(4, 8))
+    assert all(s.model_parallel == 1 for s in degraded)
+
+
 def test_workload_cluster_specs_are_live_feasible():
     """to_cluster_specs maps trace jobs onto specs the live trainer can
     actually run: p divides the global batch and fits the pool, steps land
