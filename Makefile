@@ -1,7 +1,8 @@
 # Tier-1 verification and common entry points (see ROADMAP.md).
 PY ?= python
 
-.PHONY: test test-fast docs-check cluster-demo bench-cluster bench-smoke
+.PHONY: test test-fast docs-check cluster-demo bench-cluster bench-smoke \
+	bench-reshape
 
 # the tier-1 command: full suite, fail fast
 test:
@@ -22,9 +23,14 @@ cluster-demo:
 bench-cluster:
 	PYTHONPATH=src $(PY) benchmarks/cluster_bench.py
 
+# in-memory RESHAPE vs checkpoint-stop-resume on the same (4,1)->(2,2)
+# transition (the live-reparallelization overhead claim)
+bench-reshape:
+	PYTHONPATH=src $(PY) benchmarks/cluster_bench.py --reshape
+
 # tiny live config under BOTH throughput models (analytic priors vs live
 # measured curves); the same contract runs in the tier-1 suite as the
-# slow-marked test_bench_smoke_cluster_under_both_models
+# slow-marked test_bench_smoke_cluster_under_both_models; runs in CI
 bench-smoke:
 	PYTHONPATH=src $(PY) benchmarks/cluster_bench.py \
 	  --policies throughput --throughput-model analytic \

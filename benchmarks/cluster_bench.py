@@ -15,11 +15,21 @@ field model-parallel: allocations then move M-device groups, measuring
 what 2-D (data x model) packing costs relative to the mp=1 baseline on
 the same pool; per-job degrees mix via the job grammar's ``:mp=`` field.
 
+``--reshape`` runs the live-reparallelization overhead scenario instead:
+ONE real trainer is driven through the same ``(dp=4, mp=1) -> (dp=2,
+mp=2)`` transition twice — once with the in-memory RESHAPE verb (state
+resharded at a mini-batch boundary, context prep hidden in the
+background) and once the checkpoint-stop-resume way (save to disk, tear
+everything down, rebuild at the new shape, restore). Reported stop times
+are the windows training is actually paused; the in-memory path must
+come in strictly below the checkpoint path on the same transition.
+
   PYTHONPATH=src python benchmarks/cluster_bench.py
   PYTHONPATH=src python benchmarks/cluster_bench.py \
       --throughput-model measured --policies throughput
   PYTHONPATH=src python benchmarks/cluster_bench.py --devices 8 \
       --policies throughput --model-parallel 2
+  PYTHONPATH=src python benchmarks/cluster_bench.py --reshape
 """
 import argparse
 import os
@@ -28,6 +38,54 @@ import time
 
 sys.path.insert(0, os.path.dirname(__file__))
 from common import emit, save  # noqa: E402
+
+
+def run_reshape_bench(args):
+    """In-memory RESHAPE vs checkpoint-stop-resume on one transition."""
+    import jax
+    from repro.core.stop_resume import stop_resume_rescale
+    from common import make_trainer  # noqa: E402 (benchmarks path)
+
+    from_shape, to_shape = (4, 1), (2, 2)
+
+    def fresh():
+        t = make_trainer(from_shape[0], batch=12, seq=64,
+                         devices=jax.devices(), seed=0,
+                         time_allowance_s=0.1)
+        t.run(4)                    # settle the step-time EMA
+        return t
+
+    # in-memory RESHAPE: prep hidden in the background, training keeps
+    # stepping, the state reshards at the scheduled batch boundary
+    tr = fresh()
+    tr.reshape(*to_shape, release=False)
+    rec_mem = tr.wait_for_scaling()
+    tr.run(2)                       # prove the job is alive at (2, 2)
+
+    # checkpoint fallback: same transition, everything stopped throughout
+    tr2 = fresh()
+    rec_ckpt = stop_resume_rescale(tr2, to_shape[0], target_mp=to_shape[1])
+    tr2.run(2)
+
+    results = {
+        "transition": {"from": list(from_shape), "to": list(to_shape)},
+        "in_memory": rec_mem.summary(),
+        "checkpoint": rec_ckpt.summary(),
+        "stop_ratio": (rec_ckpt.stop_time / rec_mem.stop_time
+                       if rec_mem.stop_time > 0 else None),
+        "reshape_beats_checkpoint":
+            rec_mem.stop_time < rec_ckpt.stop_time,
+    }
+    emit("reshape_in_memory_stop", rec_mem.stop_time * 1e6,
+         f"steps_during_prep={rec_mem.steps_during_prep}")
+    emit("reshape_checkpoint_stop", rec_ckpt.stop_time * 1e6,
+         f"ratio={results['stop_ratio']:.1f}x")
+    save("reshape", results)
+    print(f"in-memory reshape stop: {rec_mem.stop_time * 1e3:.1f} ms "
+          f"(e2e {rec_mem.e2e_time:.2f} s, "
+          f"{rec_mem.steps_during_prep} steps trained during prep); "
+          f"checkpoint-stop-resume: {rec_ckpt.stop_time:.2f} s — "
+          f"{'OK' if results['reshape_beats_checkpoint'] else 'REGRESSION'}")
 
 
 def main():
@@ -45,12 +103,18 @@ def main():
                          "an explicit :mp= field — allocations move "
                          "M-device groups")
     ap.add_argument("--profile-sweeps", action="store_true")
+    ap.add_argument("--reshape", action="store_true",
+                    help="run the live-reparallelization overhead scenario "
+                         "(in-memory RESHAPE vs checkpoint-stop-resume) "
+                         "instead of the policy sweep")
     ap.add_argument("--max-rounds", type=int, default=300)
     ap.add_argument("--compile-cache", default=None, metavar="DIR")
     args = ap.parse_args()
 
     os.environ.setdefault(
         "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.devices}")
+    if args.reshape:
+        return run_reshape_bench(args)
     from repro.cluster import ClusterExecutor, make_policy
     from repro.launch.cluster import parse_jobs
     from repro.sched.throughput import AnalyticModel, MeasuredModel

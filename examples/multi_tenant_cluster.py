@@ -19,10 +19,16 @@ re-admits it from the saved state once capacity frees up.
   PYTHONPATH=src python examples/multi_tenant_cluster.py \
       --policy throughput \
       --jobs "big=vgg19:1:20:mp=2@0,a=resnet50:1:8@0,b=googlenet:1:6@0"
+  # mp=auto leaves the degree to the scheduler: reshape-aware policies
+  # may trade data- for model-parallelism live (the RESHAPE verb)
+  PYTHONPATH=src python examples/multi_tenant_cluster.py \
+      --policy elastic-tiresias \
+      --jobs "flex=vgg19:4:20:mp=auto@0,b=googlenet:2:10@4"
 
 Pass --jobs to change the tenant mix (grammar:
-``name=profile:requested_p:total_steps[:mp=M]@arrival_round``; see
-docs/scheduling.md for how each policy packs mixed-mp tenants).
+``name=profile:requested_p:total_steps[:mp=M|mp=auto]@arrival_round``;
+see docs/scheduling.md for how each policy packs mixed-mp tenants and
+when it reshapes mp=auto ones).
 """
 import sys
 

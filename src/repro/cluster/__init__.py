@@ -1,8 +1,9 @@
 from repro.cluster.executor import ClusterExecutor, DiskCheckpointer, \
     default_trainer_factory, enable_compile_cache
 from repro.cluster.job import ClusterJob, JobSpec, JobState
-from repro.cluster.policy import Action, make_policy, plan_actions
+from repro.cluster.policy import Action, ScriptedPolicy, make_policy, \
+    plan_actions
 
 __all__ = ["ClusterExecutor", "DiskCheckpointer", "default_trainer_factory",
            "enable_compile_cache", "ClusterJob", "JobSpec", "JobState",
-           "Action", "make_policy", "plan_actions"]
+           "Action", "ScriptedPolicy", "make_policy", "plan_actions"]

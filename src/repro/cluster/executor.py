@@ -26,7 +26,17 @@ allocation map, which is diffed into real elastic actions:
             ALL devices come home, and the job is parked PREEMPTED — it
             re-enters the pending queue as re-admittable demand;
   migrate — straggler-triggered (§5.2): workers flagged by the job's
-            StragglerDetector are cycled out in one fused switch.
+            StragglerDetector are cycled out in one fused switch;
+  reshape — live reparallelization (repro.reshape): a policy target whose
+            model-parallel degree differs from an mp=auto job's live one
+            trades data-parallel for model-parallel degree stop-free at a
+            mini-batch boundary. The device delta settles against the
+            pool: a footprint-growing reshape is funded from free devices
+            up front (or parked as a want), a footprint-shrinking one
+            returns the surplus when the switch commits — the same
+            ownership-transfer discipline as grants and reclaims. A
+            re-admission of a parked mp=auto job may likewise restore its
+            checkpoint onto a different degree than it was saved at.
 
 Policies reason about t(p) through the executor's pluggable
 ``throughput_model`` (sched.throughput): with the default AnalyticModel
@@ -63,6 +73,7 @@ import time
 from repro.cluster.job import ClusterJob, JobSpec, JobState
 from repro.cluster.policy import plan_actions
 from repro.core.scaling import Busy, Phase
+from repro.sched.base import normalize_target
 
 
 def enable_compile_cache(path: str) -> str:
@@ -190,6 +201,7 @@ class ClusterExecutor:
                  prep_yield_s: float = 0.15, serialize_prep: bool = True,
                  checkpointer=None, throughput_model=None,
                  profile_sweeps: bool = False, profile_steps: int = 3,
+                 profile_ttl: float | None = None,
                  compile_cache: str | None = None):
         if compile_cache:
             enable_compile_cache(compile_cache)
@@ -211,7 +223,13 @@ class ClusterExecutor:
         self.throughput_model = throughput_model
         self.profile_sweeps = profile_sweeps
         self.profile_steps = profile_steps
-        self._profiled: set[int] = set()
+        # staleness TTL in scheduling rounds: None sweeps each job at most
+        # once per lifetime (the pre-TTL behavior); a finite TTL re-sweeps
+        # a job once its measured curve ages out — curves drift as data,
+        # interference or the job's own shape change, and MeasuredModel
+        # EMA-blends the re-sweep over the stale curve
+        self.profile_ttl = profile_ttl
+        self._profiled: dict[int, float] = {}   # jid -> round last swept
         self.devices = list(devices)
         self.n_gpus = len(self.devices)
         self.free: list = list(self.devices)
@@ -228,7 +246,7 @@ class ClusterExecutor:
         self.finished: list[ClusterJob] = []
         self._to_arrive = sorted(self.jobs.values(),
                                  key=lambda j: (j.arrival, j.jid))
-        self._wants: dict[int, int] = {}        # jid -> target parallelism
+        self._wants: dict[int, tuple[int, int]] = {}  # jid -> (groups, mp)
         self.round = 0
         self.events: list[dict] = []
 
@@ -239,7 +257,7 @@ class ClusterExecutor:
 
     # ------------------------------------------------------------- events
     def _event(self, op: str, job: ClusterJob, from_p: int, to_p: int,
-               devices=None, loaned: int | None = None):
+               devices=None, loaned: int | None = None, **extra):
         e = {
             "round": self.round, "op": op, "job": job.spec.name,
             "jid": job.jid, "from_p": from_p, "to_p": to_p,
@@ -248,17 +266,26 @@ class ClusterExecutor:
                        if loaned is None else loaned)}
         if devices is not None:
             e["devices"] = [getattr(d, "id", d) for d in devices]
+        e.update(extra)
         self.events.append(e)
 
     def _on_devices_released(self, trainer, freed: list):
         """ElasticTrainer hand-off hook: a release_devices scale-in (or a
-        loan reclaim) COMMITTED; the devices come home to the pool. The
-        scale_in event is logged here — at ownership transfer — not at
-        request time, so the event order reflects which devices actually
-        funded which grants."""
+        loan reclaim, or a footprint-shrinking RESHAPE) COMMITTED; the
+        devices come home to the pool. The event is logged here — at
+        ownership transfer — not at request time, so the event order
+        reflects which devices actually funded which grants. A reshape's
+        surplus logs as ``reshape_release`` (the shape change itself was
+        logged by the ``reshape`` event); inventing a scale_in transition
+        in the NEW shape's units would corrupt the allocation trace."""
         self.free.extend(freed)
         job = self.jobs.get(getattr(trainer, "_cluster_jid", -1))
-        if job is not None:
+        if job is None:
+            return
+        if getattr(trainer, "_releasing_op", None) == "reshape":
+            self._event("reshape_release", job, job.alloc, job.alloc,
+                        devices=freed, loaned=0)
+        else:
             self._event("scale_in", job, job.alloc + len(freed) // job.mp,
                         job.alloc, devices=freed)
 
@@ -273,14 +300,17 @@ class ClusterExecutor:
             else:
                 self.pending.append(job)
 
-    def _start(self, job: ClusterJob, p: int):
+    def _start(self, job: ClusterJob, p: int, mp: int | None = None):
         """Admit ``job`` on ``p`` mp-sized device groups from the free
         pool. When the job carries a checkpoint handle this is a
         re-admission: the fresh trainer (possibly on a different device
-        set / parallelism) is restored from the saved state before it
-        takes its first step."""
-        devs = [self.free.pop(0) for _ in range(p * job.mp)]
-        trainer = job.launch(devs, self.trainer_factory)
+        set / parallelism — and, for an mp=auto tenant, a different
+        model-parallel degree than the checkpoint was saved at; the
+        restore reshards along a reshape plan) is restored from the saved
+        state before it takes its first step."""
+        mp = mp or job.mp
+        devs = [self.free.pop(0) for _ in range(p * mp)]
+        trainer = job.launch(devs, self.trainer_factory, mp=mp)
         trainer.on_devices_released = self._on_devices_released
         trainer._cluster_jid = job.jid
         if job in self.pending:
@@ -369,28 +399,76 @@ class ClusterExecutor:
                     continue        # a switch is in flight; next resched
                 self._wants.pop(act.jid, None)
                 # the scale_in event logs in _on_devices_released at commit
+            elif act.kind == "reshape":
+                if act.jid in self.running and \
+                        not self._reshape(job, act.target_p, act.target_mp):
+                    # a footprint-growing reshape short on free devices
+                    # waits like any grow — satisfied when devices free up
+                    self._wants[act.jid] = (act.target_p, act.target_mp)
             else:                   # start / scale_out: wait for devices
-                self._wants[act.jid] = act.target_p
+                self._wants[act.jid] = act.shape(job)
         # drop stale wants for jobs the policy no longer wants to grow —
         # including an explicit 0 target for a parked job (a revoked
         # re-admission must not launch later against the current decision)
         for jid in list(self._wants):
-            if not alloc.get(jid) or self.jobs[jid].finish_time is not None:
+            job = self.jobs[jid]
+            target = normalize_target(job, alloc.get(jid, 0))[0]
+            if target <= 0 or job.finish_time is not None:
                 del self._wants[jid]
+
+    def _reshape(self, job: ClusterJob, p: int, mp: int) -> bool:
+        """Issue the RESHAPE verb against a running job: re-mesh it from
+        its live ``(alloc, mp)`` to ``(p, mp)``, settling the device delta
+        against the pool — extra devices are granted up front (ownership
+        moves now, the stop-free switch commits at a batch boundary),
+        surplus devices come home through ``on_devices_released`` when
+        the switch commits. Returns False only when a footprint-growing
+        reshape is short on free devices (the caller parks it as a want);
+        Busy trainers swallow the attempt and are re-planned at the next
+        reschedule."""
+        trainer = job.trainer
+        cur_d, new_d = job.devices_held, p * mp
+        grant = []
+        if new_d > cur_d:
+            if len(self.free) < new_d - cur_d:
+                return False
+            grant = [self.free.pop(0) for _ in range(new_d - cur_d)]
+        from_p, from_mp = job.alloc, job.mp
+        try:
+            trainer.reshape(p, mp, new_devices=grant or None, release=True)
+        except (Busy, ValueError):
+            self.free = grant + self.free
+            return True         # a switch is in flight; next resched
+        job.n_reshapes += 1
+        # the shape-change record; a shrink's freed devices are logged by
+        # the release hook when the switch commits (ownership transfer),
+        # a growth's grant moves ownership here and rides on this event
+        self._event("reshape", job, from_p, p, loaned=0,
+                    devices=grant if grant else None,
+                    from_mp=from_mp, to_mp=mp)
+        return True
 
     def _satisfy_wants(self):
         """Grant free devices toward wanted growth in whole mp-sized
         groups, FIFO by arrival — this is where one job's scale-in (or
-        preemption) funds another's scale-out or a parked job's
-        re-admission. Leftover devices smaller than a job's group size
-        stay free rather than being parked uselessly in its pool."""
+        preemption) funds another's scale-out, a parked job's
+        re-admission, or a waiting footprint-growing reshape. Leftover
+        devices smaller than a job's group size stay free rather than
+        being parked uselessly in its pool."""
         for jid in sorted(self._wants,
                           key=lambda i: (self.jobs[i].arrival, i)):
-            job, target = self.jobs[jid], self._wants[jid]
+            job, (target, mp) = self.jobs[jid], self._wants[jid]
             if job.trainer is None:
-                if len(self.free) >= target * job.mp and not (
+                if len(self.free) >= target * mp and not (
                         self.serialize_prep and self._prep_in_flight()):
-                    self._start(job, target)    # foreground compile
+                    self._start(job, target, mp)    # foreground compile
+                continue
+            if mp != job.mp:    # a parked reshape waiting for devices
+                if job.trainer.controller.phase is not Phase.IDLE or (
+                        self.serialize_prep and self._prep_in_flight()):
+                    continue
+                if self._reshape(job, target, mp):
+                    del self._wants[jid]
                 continue
             cur = job.alloc
             if target <= cur:
@@ -423,7 +501,13 @@ class ClusterExecutor:
         blocking (opt-in for exactly that reason); its mini-batches are
         real training work but do not count toward the job's total_steps —
         profiling must not fast-forward the schedule. Only models that can
-        ``ingest`` sweep tables (MeasuredModel) are worth sweeping for."""
+        ``ingest`` sweep tables (MeasuredModel) are worth sweeping for.
+
+        With a finite ``profile_ttl`` a job becomes sweep-eligible AGAIN
+        once its last sweep is ``profile_ttl`` rounds old: measured curves
+        drift (data distribution, co-tenant interference, a reshape onto a
+        new shape), and the re-sweep re-ingests into the model's EMA
+        stream, re-blending the stale curve toward current reality."""
         ingest = getattr(self.throughput_model, "ingest", None)
         if ingest is None or not self.free:
             return
@@ -433,7 +517,11 @@ class ClusterExecutor:
         for jid in sorted(self.running,
                           key=lambda i: (self.jobs[i].arrival, i)):
             job = self.jobs[jid]
-            if jid in self._profiled or job.spec.inelastic:
+            last = self._profiled.get(jid)
+            fresh = last is not None and (
+                self.profile_ttl is None or
+                self.now - last < self.profile_ttl)
+            if fresh or job.spec.inelastic:
                 continue    # inelastic tenants are NEVER resized, not
                             # even transiently for a measurement
             if job.remaining_steps <= 2 * self.profile_steps:
@@ -467,7 +555,7 @@ class ClusterExecutor:
                 # normal scale-in path; the sweep retries a later round
                 continue
             ingest(job, table)
-            self._profiled.add(jid)
+            self._profiled[jid] = self.now
             self._event("profile", job, max_p, cur,
                         loaned=max(0, max_p - job.requested_p))
             break       # at most one sweep per round
@@ -482,10 +570,11 @@ class ClusterExecutor:
             return
         job.on_step(m, self.now)
         # free observation (EDL §5.2): every live mini-batch's measured
-        # step time at the job's CURRENT parallelism feeds the model the
+        # step time at the job's CURRENT shape feeds the model the
         # policies schedule from — a no-op on the analytic model
         self.throughput_model.observe(
-            job, int(m.get("p", trainer.p)), m.get("step_time", 0.0))
+            job, int(m.get("p", trainer.p)), m.get("step_time", 0.0),
+            mp=getattr(trainer, "model_parallel", None))
         flagged = [w for w in getattr(trainer, "_flagged_stragglers", [])
                    if w in trainer.worker_ids]
         if flagged and trainer.controller.phase is Phase.IDLE \
@@ -631,6 +720,8 @@ class ClusterExecutor:
                                if e["op"] == "preempt"),
             "readmissions": sum(1 for e in self.events
                                 if e["op"] == "readmit"),
+            "reshapes": sum(1 for e in self.events
+                            if e["op"] == "reshape"),
             "conserved": True,      # run() asserts it every round
             "jobs": [self.jobs[jid].summary() for jid in sorted(self.jobs)],
             "events": self.events,

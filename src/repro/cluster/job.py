@@ -74,6 +74,11 @@ class JobSpec:
     arrival: float = 0.0        # executor-clock units (scheduling rounds)
     inelastic: bool = False
     model_parallel: int = 1     # devices per group (the mesh's model axis)
+    # mp=auto (spec grammar ``:mp=auto``): the tenant does not pin its
+    # model-parallel degree — policies may RESHAPE it live, trading
+    # data-parallel for model-parallel (``model_parallel`` is then only
+    # the launch shape). Rigid tenants keep their degree for life.
+    mp_auto: bool = False
     lr: float = 1e-3
     n_samples: int = 1 << 10
     d_partitions: int = 16
@@ -97,6 +102,7 @@ class ClusterJob:
         self.jid = jid
         self.spec = spec
         self.trainer = None
+        self._mp = spec.model_parallel  # live degree while no trainer exists
         self.state = JobState.PENDING
         self.steps_done = 0
         self.attained_gpu_s = 0.0       # Tiresias service metric
@@ -104,6 +110,7 @@ class ClusterJob:
         self.finish_time: float | None = None
         self.n_migrations = 0
         self.n_preemptions = 0
+        self.n_reshapes = 0
         self.checkpoint = None          # opaque handle (dir path on disk)
         self.last_loss: float | None = None
         self.last_step: int | None = None
@@ -128,7 +135,25 @@ class ClusterJob:
 
     @property
     def mp(self) -> int:
-        """Devices per allocation group (sched.base.group_size)."""
+        """Devices per allocation group (sched.base.group_size) — the
+        job's LIVE model-parallel degree. Follows the trainer across
+        RESHAPE commits; a parked job remembers the shape it last ran at
+        (its checkpoint restores onto any shape regardless)."""
+        if self.trainer is not None:
+            return int(getattr(self.trainer, "model_parallel",
+                               self._mp) or self._mp)
+        return self._mp
+
+    @property
+    def mp_auto(self) -> bool:
+        """May policies re-target this job's model-parallel degree?"""
+        return self.spec.mp_auto
+
+    @property
+    def requested_mp(self) -> int:
+        """The degree ``requested_p`` was quoted at (the submitted shape) —
+        ``requested_p * requested_mp`` is the job's requested DEVICES no
+        matter what shape it currently runs at."""
         return self.spec.model_parallel
 
     @property
@@ -144,25 +169,36 @@ class ClusterJob:
         """Allocation in GROUPS (data-parallel replicas) — the unit every
         policy reasons in. ``devices_held`` is the device-denominated twin
         the conservation assert counts."""
-        return self.devices_held // self.spec.model_parallel
+        return self.devices_held // self.mp
 
     @property
     def remaining_steps(self) -> int:
         return max(0, self.spec.total_steps - self.steps_done)
 
     # ------------------------------------------------------------ lifecycle
-    def launch(self, devices: list, trainer_factory):
+    def launch(self, devices: list, trainer_factory, *,
+               mp: int | None = None):
         """Build the live trainer on ``devices`` (a whole number of
         mp-sized groups). Used both for first admission and for
         re-admission after a preemption (the executor restores the
-        checkpoint into the fresh trainer right after)."""
+        checkpoint into the fresh trainer right after). ``mp`` overrides
+        the launch shape for mp=auto tenants — a re-admission may restore
+        onto a DIFFERENT model-parallel degree than the checkpoint was
+        written with (the factory sees a spec with the chosen degree; the
+        submitted spec is untouched)."""
         assert self.trainer is None, f"{self.spec.name} already launched"
         assert self.state in (JobState.PENDING, JobState.PREEMPTED), \
             f"cannot launch from {self.state}"
-        assert len(devices) % self.spec.model_parallel == 0, \
+        mp = int(mp) if mp else self.spec.model_parallel
+        assert mp == self.spec.model_parallel or self.spec.mp_auto, \
+            f"{self.spec.name} is mp-rigid; cannot launch at mp={mp}"
+        assert len(devices) % mp == 0, \
             (f"{self.spec.name}: {len(devices)} devices is not a whole "
-             f"number of mp={self.spec.model_parallel} groups")
-        self.trainer = trainer_factory(self.spec, list(devices))
+             f"number of mp={mp} groups")
+        spec = (self.spec if mp == self.spec.model_parallel else
+                dataclasses.replace(self.spec, model_parallel=mp))
+        self._mp = mp
+        self.trainer = trainer_factory(spec, list(devices))
         self.state = JobState.RUNNING
         return self.trainer
 
@@ -174,8 +210,10 @@ class ClusterJob:
 
     def park(self):
         """CHECKPOINTING -> PREEMPTED: the save landed and the trainer was
-        torn down; the job owns nothing but its checkpoint handle."""
+        torn down; the job owns nothing but its checkpoint handle (and the
+        memory of the shape it last ran at)."""
         assert self.state is JobState.CHECKPOINTING, self.state
+        self._mp = self.mp
         self.trainer = None
         self.state = JobState.PREEMPTED
         self.n_preemptions += 1
@@ -204,6 +242,8 @@ class ClusterJob:
             "state": self.state.value,
             "requested_p": self.spec.requested_p,
             "model_parallel": self.spec.model_parallel,
+            "mp_now": self.mp,
+            "mp_auto": self.spec.mp_auto,
             "steps_done": self.steps_done,
             "attained_gpu_s": round(self.attained_gpu_s, 3),
             "arrival": self.arrival, "start": self.start_time,
@@ -214,4 +254,5 @@ class ClusterJob:
             "final_step": self.last_step,
             "migrations": self.n_migrations,
             "preemptions": self.n_preemptions,
+            "reshapes": self.n_reshapes,
         }

@@ -44,8 +44,11 @@ EXEC_CACHE_MAX = 8          # compiled topologies retained per job (LRU)
 
 @dataclasses.dataclass
 class ExecHandle:
-    """Everything tied to one parallelism: the 'communication topology'."""
+    """Everything tied to one (data, model) shape: the 'communication
+    topology'. ``p`` is the data-parallel replica count, ``mp`` the
+    model-parallel degree — ``p * mp`` devices back the mesh."""
     p: int
+    mp: int
     mesh: object
     step_fn: Callable
     state_shardings: object
@@ -68,6 +71,10 @@ class ElasticTrainer:
                                their data-partition remainders).
       migrate()              — fused scale-in + scale-out at constant p,
                                one topology switch (straggler mitigation).
+      reshape(p, mp)         — live reparallelization: trade data-parallel
+                               for model-parallel degree in one stop-free
+                               switch; the train state is resharded along
+                               a repro.reshape plan at the boundary.
       grant_devices(devs)    — a scheduler HANDS the job extra devices; the
                                job owns them immediately and scales out onto
                                them stop-free. A grant beyond the job's
@@ -174,27 +181,28 @@ class ElasticTrainer:
         self.straggler_detector.reset(wid)
 
     # ---------------------------------------------------------- executables
-    def _build_exec(self, p: int) -> ExecHandle:
-        """Execution-context preparation for parallelism p: mesh + shardings
-        + AOT-compiled step. This is the cost stop-free scaling hides.
+    def _build_exec(self, p: int, mp: int | None = None) -> ExecHandle:
+        """Execution-context preparation for shape (p, mp): mesh +
+        shardings + AOT-compiled step. This is the cost stop-free scaling
+        hides. ``mp`` defaults to the job's current model-parallel degree;
+        the RESHAPE verb passes a different one.
 
-        Handles are cached per (p, exact ordered devices) — order matters:
-        the mesh layout and shardings are position-dependent, so the same
-        device set in a different order is a different executable.
+        Handles are cached per (p, mp, exact ordered devices) — order
+        matters: the mesh layout and shardings are position-dependent, so
+        the same device set in a different order is a different executable.
         Re-scaling to a topology this job already ran on (compact/expand
         cycles under a cluster policy, migrate at constant p) skips the
         recompile entirely; the cache is LRU-bounded so a long-lived job
         cycling through loaner combinations cannot pin unbounded compiled
         executables. The stop-resume baseline clears the cache — a
         restarted process pays context preparation from zero."""
-        key = (p, tuple(d.id for d in
-                        self.devices[: p * self.model_parallel]))
+        mp = mp if mp is not None else self.model_parallel
+        key = (p, mp, tuple(d.id for d in self.devices[: p * mp]))
         cached = self._exec_cache.get(key)
         if cached is not None:
             self._exec_cache[key] = self._exec_cache.pop(key)   # LRU touch
             return cached
-        mesh = make_mesh(p, self.model_parallel, devices=np.array(
-            self.devices[: p * self.model_parallel]))
+        mesh = make_mesh(p, mp, devices=np.array(self.devices[: p * mp]))
         st_sh = state_sharding(self.cfg, mesh, self.optimizer)
         from repro.configs.base import InputShape, input_specs
         shape = InputShape("rt", self.seq_len, self.global_batch, "train")
@@ -213,7 +221,7 @@ class ElasticTrainer:
         else:
             step_fn = jax.jit(fn, in_shardings=(st_sh, b_sh),
                               out_shardings=(st_sh, None))
-        handle = ExecHandle(p, mesh, step_fn, st_sh, b_sh)
+        handle = ExecHandle(p, mp, mesh, step_fn, st_sh, b_sh)
         self._exec_cache[key] = handle
         while len(self._exec_cache) > EXEC_CACHE_MAX:
             self._exec_cache.pop(next(iter(self._exec_cache)))
@@ -325,21 +333,26 @@ class ElasticTrainer:
 
     def _request(self, op: str, target_p: int, *, block: bool,
                  victims=None, n_join: int | None = None,
-                 release: bool = False):
-        avail = len(self.devices) // self.model_parallel
+                 release: bool = False, target_mp: int | None = None):
+        target_mp = (target_mp if target_mp is not None
+                     else self.model_parallel)
+        avail = len(self.devices) // target_mp
         if target_p > avail:
-            raise ValueError(f"need {target_p} slices, have {avail}")
+            raise ValueError(f"need {target_p} slices of {target_mp} "
+                             f"device(s), have {avail}")
         if self.global_batch % target_p:
             raise ValueError(f"global batch {self.global_batch} not "
                              f"divisible by p={target_p}")
         plan = self.controller.admit(op, self.p, target_p)  # raises Busy
+        plan.record.from_mp = self.model_parallel
+        plan.record.to_mp = target_mp
         plan.exiting = tuple(victims or ())
         plan.joining = ("new",) * (n_join or max(0, target_p - self.p))
         plan.release_devices = release
         steps_before = self.step_idx
 
         def prepare():
-            handle = self._build_exec(target_p)
+            handle = self._build_exec(target_p, target_mp)
             k = max(1, math.ceil(self.time_allowance_s /
                                  max(self.step_time_ema or 0.01, 1e-4)))
             plan.record.steps_during_prep = self.step_idx - steps_before
@@ -362,8 +375,11 @@ class ElasticTrainer:
         self.controller.begin_switch()
         handle: ExecHandle = plan.exec_handle
         op = plan.record.op
-        # graceful exit of victims (their data remainder returns to the pool)
-        if op in ("scale_in", "migrate"):
+        # graceful exit of victims (their data remainder returns to the
+        # pool). A reshape that shrinks the data axis retires the surplus
+        # data-parallel slices exactly like a scale-in.
+        if op in ("scale_in", "migrate") or \
+                (op == "reshape" and handle.p < len(self.worker_ids)):
             victims = list(plan.exiting) or self.worker_ids[handle.p:]
             leader_leaving = self.leader_id in victims
             for wid in victims:
@@ -375,20 +391,42 @@ class ElasticTrainer:
                 self.leader_id = self.election.elect().leader_id
         while len(self.worker_ids) < handle.p:
             self._add_worker()
-        # model broadcast == reshard onto the new mesh
-        self.state = jax.device_put(self.state, handle.state_shardings)
+        # model broadcast == reshard onto the new mesh. A reshape routes
+        # through the planner so the record carries the move accounting;
+        # plain data-axis scaling keeps the direct device_put.
+        if op == "reshape":
+            from repro.reshape import StateSpec, apply_plan, plan_reshard
+            src = StateSpec.for_trainer(self)
+            dst = StateSpec.from_shardings(handle.p, handle.mp,
+                                           handle.state_shardings,
+                                           self.state)
+            rplan = plan_reshard(src, dst)
+            plan.record.reshard_bytes_moved = rplan.bytes_moved
+            plan.record.reshard_bytes_kept = rplan.bytes_kept
+            self.state = apply_plan(rplan, self.state,
+                                    handle.state_shardings)
+        else:
+            self.state = jax.device_put(self.state, handle.state_shardings)
         jax.block_until_ready(jax.tree.leaves(self.state)[0])
         self.exec = handle
         self.p = handle.p
+        self.model_parallel = handle.mp
         freed = []
         if plan.release_devices:
             # hand everything beyond the new topology back to the caller
             # (cluster executor reclaim): the job stops owning those devices
-            in_use = handle.p * self.model_parallel
+            in_use = handle.p * handle.mp
             freed, self.devices = self.devices[in_use:], self.devices[:in_use]
         rec = self.controller.complete()
         if freed and self.on_devices_released is not None:
-            self.on_devices_released(self, freed)
+            # let the hook know WHICH verb is freeing (a reshape's surplus
+            # is not a data-parallel scale-in; event logs must not invent
+            # a p-transition that never happened)
+            self._releasing_op = rec.op
+            try:
+                self.on_devices_released(self, freed)
+            finally:
+                self._releasing_op = None
         return rec
 
     # ------------------------------------------------ device pool hand-off
@@ -424,6 +462,43 @@ class ElasticTrainer:
         Stop-free like any scale-in; raises Busy under a conflicting op."""
         return self.scale_in(n_slices, victims=victims, block=block,
                              release=True)
+
+    def reshape(self, p: int, mp: int, *, new_devices=None,
+                block: bool = False, release: bool = False
+                ) -> ScalingRecord | None:
+        """RESHAPE: trade data-parallel for model-parallel degree live —
+        re-mesh the job from ``(self.p, self.model_parallel)`` to
+        ``(p, mp)`` stop-free. The new executable compiles in the
+        background while training continues at the old shape; at the
+        scheduled mini-batch boundary the train state is resharded onto
+        the new mesh along a ``repro.reshape.plan_reshard`` plan (the
+        record carries its byte accounting) and surplus data-parallel
+        slices exit gracefully, returning their data remainders.
+
+        Device arithmetic: ``new_devices`` joins the job's pool first (a
+        scheduler funding a footprint-growing reshape); with ``release=
+        True`` any devices beyond ``p * mp`` are handed to
+        ``on_devices_released`` when the switch commits (a footprint-
+        shrinking reshape returns them to the scheduler's free pool).
+        Raises ``Busy`` (the paper's RETRY) while another operation is in
+        flight."""
+        if self.controller.phase is not Phase.IDLE:
+            raise Busy("scaling in flight; retry later")
+        if mp < 1 or p < 1:
+            raise ValueError(f"reshape target ({p}, {mp}) must be >= 1 "
+                             f"on both axes")
+        if p == self.p and mp == self.model_parallel:
+            raise ValueError(f"already at shape ({p}, {mp})")
+        if new_devices:
+            self.devices = self.devices + list(new_devices)
+        try:
+            return self._request("reshape", p, block=block,
+                                 release=release, target_mp=mp)
+        except Exception:
+            if new_devices:
+                self.devices = self.devices[:len(self.devices)
+                                            - len(new_devices)]
+            raise
 
     # ------------------------------------------------------------- helpers
     def run(self, n_steps: int, *, on_step=None):

@@ -31,7 +31,7 @@ class Busy(Exception):
 
 @dataclasses.dataclass
 class ScalingRecord:
-    op: str                     # scale_out | scale_in | migrate | stop_resume
+    op: str         # scale_out | scale_in | migrate | reshape | stop_resume
     from_p: int
     to_p: int
     t_request: float = 0.0
@@ -41,6 +41,13 @@ class ScalingRecord:
     t_switch_end: float = 0.0
     steps_during_prep: int = 0  # stop-free evidence: training kept going
     switch_step: int = -1
+    # model-parallel degree across the switch (reshape trades from_p
+    # data-parallel replicas of from_mp devices for to_p of to_mp)
+    from_mp: int = 1
+    to_mp: int = 1
+    # reshape.plan_reshard accounting for the state move at commit
+    reshard_bytes_moved: int = 0
+    reshard_bytes_kept: int = 0
 
     @property
     def prep_time(self) -> float:
@@ -55,12 +62,17 @@ class ScalingRecord:
         return self.t_switch_end - self.t_request
 
     def summary(self) -> dict:
-        return {"op": self.op, "from_p": self.from_p, "to_p": self.to_p,
-                "prep_s": round(self.prep_time, 4),
-                "stop_s": round(self.stop_time, 4),
-                "e2e_s": round(self.e2e_time, 4),
-                "steps_during_prep": self.steps_during_prep,
-                "switch_step": self.switch_step}
+        out = {"op": self.op, "from_p": self.from_p, "to_p": self.to_p,
+               "prep_s": round(self.prep_time, 4),
+               "stop_s": round(self.stop_time, 4),
+               "e2e_s": round(self.e2e_time, 4),
+               "steps_during_prep": self.steps_during_prep,
+               "switch_step": self.switch_step}
+        if (self.from_mp, self.to_mp) != (1, 1):
+            out.update(from_mp=self.from_mp, to_mp=self.to_mp,
+                       reshard_bytes_moved=self.reshard_bytes_moved,
+                       reshard_bytes_kept=self.reshard_bytes_kept)
+        return out
 
 
 @dataclasses.dataclass

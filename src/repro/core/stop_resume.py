@@ -35,13 +35,22 @@ def checkpoint_save(trainer, checkpoint_dir: str) -> None:
     (replayed from the last reported offset), so a restore resumes
     exactly-once data consumption no matter how many workers were mid-read.
 
+    The metadata also records the writer's parallelization: ``(p, mp)``
+    plus the full ``reshape.StateSpec`` layout, so a restore onto a
+    DIFFERENT shape can plan the reshard (checkpoint-based
+    reparallelization — the fallback path when the in-memory RESHAPE verb
+    is unavailable because the process is gone).
+
     Read-only with respect to the trainer: safe to run from a background
     thread while the job is parked (not stepping)."""
+    from repro.reshape import StateSpec
     save_checkpoint(
         checkpoint_dir, trainer.state, step=trainer.step_idx,
         pipeline_state=trainer.pipeline.state_dict(),
         extra={"samples_seen": trainer.samples_seen, "p": trainer.p,
-               "job_handle": trainer.job_handle})
+               "mp": trainer.model_parallel,
+               "job_handle": trainer.job_handle,
+               "state_spec": StateSpec.for_trainer(trainer).to_json()})
 
 
 def teardown_trainer(trainer) -> list:
@@ -70,19 +79,37 @@ def checkpoint_stop(trainer, checkpoint_dir: str) -> list:
 
 def resume_from_checkpoint(trainer, checkpoint_dir: str) -> dict:
     """Restore a checkpoint into a freshly built trainer (any device set,
-    any feasible parallelism). The trainer's execution context
-    (``trainer.exec``) must already target the NEW topology; the restored
-    arrays are resharded onto it by ``device_put``. Restores the data
-    pipeline's permutation + progress and the step / sample counters, and
-    invalidates the worker iterators' local buffers so the first post-resume
-    draw fetches fresh assignments from the restored pipeline."""
+    any feasible parallelism, any model-parallel degree). The trainer's
+    execution context (``trainer.exec``) must already target the NEW
+    topology. When the checkpoint records the writer's layout
+    (``extra.state_spec``), the restore is planned as a reshard from the
+    saved ``(dp, mp)`` onto the trainer's — validating tensor-collection
+    compatibility up front and reporting the move accounting under
+    ``meta["reshard"]`` — before the arrays land via ``apply_plan``.
+    Restores the data pipeline's permutation + progress and the step /
+    sample counters, and invalidates the worker iterators' local buffers
+    so the first post-resume draw fetches fresh assignments from the
+    restored pipeline."""
+    from repro.reshape import StateSpec, apply_plan, plan_reshard
     from repro.training.step import init_train_state
     with trainer.exec.mesh:
         template = init_train_state(trainer.cfg, trainer.optimizer,
                                     jax.random.PRNGKey(0))
     restored, meta = load_checkpoint(checkpoint_dir,
                                      like=jax.device_get(template))
-    trainer.state = jax.device_put(restored, trainer.exec.state_shardings)
+    saved_spec = (meta.get("extra") or {}).get("state_spec")
+    if saved_spec is not None:
+        src = StateSpec.from_json(saved_spec)
+        dst = StateSpec.from_shardings(trainer.p, trainer.model_parallel,
+                                       trainer.exec.state_shardings,
+                                       restored)
+        rplan = plan_reshard(src, dst)      # raises on collection mismatch
+        meta["reshard"] = rplan.summary()
+        trainer.state = apply_plan(rplan, restored,
+                                   trainer.exec.state_shardings)
+    else:   # pre-reshape checkpoint: layout-blind restore
+        trainer.state = jax.device_put(restored,
+                                       trainer.exec.state_shardings)
     jax.block_until_ready(jax.tree.leaves(trainer.state)[0])
     trainer.pipeline.load_state_dict(meta["pipeline"])
     for it in trainer.iters.values():
@@ -96,14 +123,25 @@ def resume_from_checkpoint(trainer, checkpoint_dir: str) -> dict:
 
 
 def stop_resume_rescale(trainer, target_p: int,
-                        *, checkpoint_dir: str | None = None
+                        *, target_mp: int | None = None,
+                        checkpoint_dir: str | None = None
                         ) -> ScalingRecord:
-    """Adjust ``trainer`` to ``target_p`` the stop-resume way. Training is
-    fully stopped from t_request to t_switch_end (stop_time == e2e_time)."""
+    """Adjust ``trainer`` to ``target_p`` (and optionally a new
+    model-parallel degree ``target_mp`` — the checkpoint-based
+    reparallelization fallback the in-memory RESHAPE verb is benchmarked
+    against) the stop-resume way. Training is fully stopped from
+    t_request to t_switch_end (stop_time == e2e_time)."""
     if trainer.controller.plan is not None:
         raise Busy("scaling already in flight; retry")   # paper: RETRY
+    target_mp = (target_mp if target_mp is not None
+                 else trainer.model_parallel)
+    if target_p * target_mp > len(trainer.devices):
+        raise ValueError(f"shape ({target_p}, {target_mp}) needs "
+                         f"{target_p * target_mp} devices, trainer owns "
+                         f"{len(trainer.devices)}")
     rec = ScalingRecord("stop_resume", trainer.p, target_p,
-                        t_request=time.monotonic())
+                        t_request=time.monotonic(),
+                        from_mp=trainer.model_parallel, to_mp=target_mp)
     rec.t_prep_start = rec.t_request
     ckpt = checkpoint_dir or tempfile.mkdtemp(prefix="edl_sr_")
 
@@ -118,19 +156,22 @@ def stop_resume_rescale(trainer, target_p: int,
     trainer._exec_cache.clear()
     jax.clear_caches()
 
-    # 3. rebuild execution context at the new parallelism (foreground!)
+    # 3. rebuild execution context at the new shape (foreground!)
     while len(trainer.worker_ids) > target_p:
         trainer._remove_worker(trainer.worker_ids[-1])
     while len(trainer.worker_ids) < target_p:
         trainer._add_worker()
-    handle = trainer._build_exec(target_p)
+    handle = trainer._build_exec(target_p, target_mp)
     rec.t_prep_end = time.monotonic()
 
     # 4. restore model + pipeline state onto the rebuilt topology
     rec.t_switch_start = rec.t_prep_end
     trainer.exec = handle
-    resume_from_checkpoint(trainer, ckpt)
     trainer.p = target_p
+    trainer.model_parallel = target_mp
+    meta = resume_from_checkpoint(trainer, ckpt)
+    rec.reshard_bytes_moved = (meta.get("reshard") or {}).get(
+        "bytes_moved", 0)
     rec.t_switch_end = time.monotonic()
     # stop-resume stops everything: stop time is the whole window
     rec.t_switch_start = rec.t_request

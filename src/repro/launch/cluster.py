@@ -43,7 +43,7 @@ device-conservation verdict as JSON.
   PYTHONPATH=src python -m repro.launch.cluster --devices 4 \
       --workload "trace=philly seed=0 jobs=6 steps=4:10"
 
-Job grammar: ``name=profile:requested_p:total_steps[:mp=M]@arrival``
+Job grammar: ``name=profile:requested_p:total_steps[:mp=M|mp=auto]@arrival``
 where ``profile`` names an analytic scaling profile
 (sched.throughput.PROFILES — the ThroughputModel's prior), ``arrival`` is
 in scheduling rounds, and the optional ``mp=M`` field makes the tenant
@@ -55,10 +55,21 @@ two mp=1 tenants on 4 devices:
   PYTHONPATH=src python -m repro.launch.cluster --devices 4 \
       --jobs "big=vgg19:1:12:mp=2@0,a=resnet50:1:16@0,b=googlenet:1:10@0"
 
+``mp=auto`` leaves the degree to the scheduler instead: the tenant
+launches data-parallel and reshape-aware policies (elastic-tiresias,
+throughput) may RESHAPE it live — trading data-parallel for
+model-parallel degree at a mini-batch boundary, stop-free — as pool
+pressure and its measured/analytic curve dictate:
+
+  PYTHONPATH=src python -m repro.launch.cluster --devices 4 \
+      --policy elastic-tiresias \
+      --jobs "flex=vgg19:4:20:mp=auto@0,b=googlenet:2:10@4"
+
 Alternatively ``--workload`` synthesizes the job list from
 sched.workload's trace generators (keys: trace=philly|synthetic, seed,
 jobs, steps=LO:HI, mp=1:2 — colon-separated model-parallel degrees drawn
-per job for a mixed-mp population).
+per job for a mixed-mp population; the degree ``auto`` draws
+reshape-able tenants).
 """
 import json
 import time
@@ -66,31 +77,36 @@ import time
 
 def parse_jobs(text: str, *, batch: int, seq: int, n_samples: int,
                d_partitions: int, default_mp: int = 1):
-    """``name=profile:requested_p:total_steps[:mp=M]@arrival`` — fields
-    after the first three are ``key=value`` (extensible); ``mp`` sets the
-    tenant's model-parallel degree (devices per allocation group).
-    ``default_mp`` applies to jobs without an explicit ``mp=`` (the
-    bench's --model-parallel knob)."""
+    """``name=profile:requested_p:total_steps[:mp=M|mp=auto]@arrival`` —
+    fields after the first three are ``key=value`` (extensible); ``mp``
+    sets the tenant's model-parallel degree (devices per allocation
+    group). ``mp=auto`` leaves the degree to the scheduler: the tenant
+    launches data-parallel and reshape-aware policies may re-target its
+    degree live (the RESHAPE verb). ``default_mp`` applies to jobs
+    without an explicit ``mp=`` (the bench's --model-parallel knob)."""
     from repro.cluster.job import JobSpec
     specs = []
     for i, item in enumerate(text.split(",")):
         name, rest = item.split("=", 1)
         body, _, arrival = rest.partition("@")
         profile, req_p, steps, *extras = body.split(":")
-        mp = default_mp
+        mp, mp_auto = default_mp, False
         for extra in extras:
             key, eq, val = extra.partition("=")
-            if key == "mp" and eq:
+            if key == "mp" and eq and val == "auto":
+                mp, mp_auto = 1, True
+            elif key == "mp" and eq:
                 mp = int(val)
             else:
                 raise ValueError(
                     f"job {name!r}: unknown spec field {extra!r} "
-                    f"(supported: mp=M)")
+                    f"(supported: mp=M, mp=auto)")
         specs.append(JobSpec(
             name=name.strip(), profile=profile, requested_p=int(req_p),
             total_steps=int(steps), arrival=float(arrival or 0.0),
-            model_parallel=mp, global_batch=batch, seq_len=seq,
-            n_samples=n_samples, d_partitions=d_partitions, seed=i))
+            model_parallel=mp, mp_auto=mp_auto, global_batch=batch,
+            seq_len=seq, n_samples=n_samples, d_partitions=d_partitions,
+            seed=i))
     return specs
 
 
@@ -111,8 +127,10 @@ def parse_workload(text: str, *, devices: int, batch: int, seq: int,
     n_jobs = int(kv.get("jobs", 6))
     lo, _, hi = kv.get("steps", "4:20").partition(":")
     steps = (int(lo), int(hi or lo))
-    # mp=1:2 — colon-separated model-parallel degrees drawn per trace job
-    mp_choices = tuple(int(m) for m in kv.get("mp", "1").split(":"))
+    # mp=1:2 — colon-separated model-parallel degrees drawn per trace job;
+    # the degree "auto" draws reshape-able (mp=auto) tenants
+    mp_choices = tuple(m if m == "auto" else int(m)
+                       for m in kv.get("mp", "1").split(":"))
     if trace == "philly":
         jobs = workload.philly_like(seed=seed, n_jobs=n_jobs,
                                     mp_choices=mp_choices)
@@ -150,6 +168,11 @@ def main(argv=None):
                     help="prefill measured curves by running EDL-profile "
                          "scale-in sweeps on idle devices (measured model "
                          "only)")
+    ap.add_argument("--profile-ttl", type=float, default=None,
+                    metavar="ROUNDS",
+                    help="staleness TTL for profile sweeps: re-sweep a job "
+                         "once its measured curve is this many rounds old "
+                         "(default: sweep each job at most once)")
     ap.add_argument("--compile-cache", default=None, metavar="DIR",
                     help="persistent JAX compilation-cache directory: "
                          "repeated topologies skip recompilation across "
@@ -187,6 +210,7 @@ def main(argv=None):
     ex = ClusterExecutor(specs, policy, resched_every=args.resched_every,
                          throughput_model=model,
                          profile_sweeps=args.profile_sweeps,
+                         profile_ttl=args.profile_ttl,
                          compile_cache=args.compile_cache)
     stats = ex.run(max_rounds=args.max_rounds)
     stats["wall_s"] = round(time.monotonic() - t0, 2)
@@ -210,6 +234,12 @@ def main(argv=None):
     print("events:")
     for e in stats["events"]:
         loan = f" (loan {e['loaned']})" if e["loaned"] else ""
+        if e["op"] == "reshape":
+            shape = (f"({e['from_p']}, mp={e['from_mp']}) -> "
+                     f"({e['to_p']}, mp={e['to_mp']})")
+            print(f"  round {e['round']:3d}  {e['op']:>9s}  "
+                  f"{e['job']:>8s}  {shape}")
+            continue
         mp = f" x{e['mp']}dev" if e.get("mp", 1) != 1 else ""
         print(f"  round {e['round']:3d}  {e['op']:>9s}  {e['job']:>8s}  "
               f"p {e['from_p']} -> {e['to_p']}{mp}{loan}")
@@ -217,6 +247,7 @@ def main(argv=None):
           f"max transient loan: {stats['max_loaned']} device(s); "
           f"preemptions: {stats['preemptions']} "
           f"(re-admitted {stats['readmissions']}); "
+          f"reshapes: {stats['reshapes']}; "
           f"profile sweeps: {stats['profile_sweeps']}")
     return 0
 

@@ -1,0 +1,24 @@
+"""Live reparallelization: a state-resharding subsystem (the RESHAPE verb).
+
+EDL's original elasticity only resizes the *data* axis of a job's
+``(data, model)`` mesh; this package adds the machinery to trade
+data-parallel for model-parallel degree live — Tenplex-style: describe the
+train state as a device-independent *parallelizable tensor collection*
+(``StateSpec``), plan the minimal slice/concat/all-gather moves between any
+two ``(dp, mp)`` configurations (``plan_reshard``), and execute the plan
+either in memory at a mini-batch boundary (``apply_plan`` — the stop-free
+path ``ElasticTrainer.reshape`` commits) or through a checkpoint
+(``core.stop_resume.resume_from_checkpoint`` — the fallback path that lets
+a job saved at one ``(dp, mp)`` restore at another).
+"""
+from repro.reshape.spec import StateSpec, TensorLayout, flatten_tree, \
+    unflatten_tree
+from repro.reshape.plan import ReshardPlan, TensorMove, plan_reshard
+from repro.reshape.apply import apply_plan, apply_plan_host, assemble_state, \
+    shard_state
+
+__all__ = [
+    "StateSpec", "TensorLayout", "flatten_tree", "unflatten_tree",
+    "ReshardPlan", "TensorMove", "plan_reshard",
+    "apply_plan", "apply_plan_host", "assemble_state", "shard_state",
+]

@@ -1,0 +1,191 @@
+"""StateSpec — a device-independent description of how a train state is
+laid out over a ``(data, model)`` mesh (Tenplex's parallelizable tensor
+collection, specialized to the 2-D meshes this repo builds).
+
+A ``TensorLayout`` records, per tensor, its GLOBAL shape and which mesh
+axis (``"data"``, ``"model"`` or ``None``) each dimension is partitioned
+over at a given ``(dp, mp)``. That is everything a reshard planner needs:
+the physical device list is deliberately absent, so the same spec can be
+serialized into a checkpoint and compared against a topology built in a
+different process on different devices. Devices are addressed by their
+*linear mesh index* ``d * mp + m`` — the order ``launch.mesh.make_mesh``
+lays a device list out in — so locality reasoning ("which bytes does the
+shard at slot i already hold?") works without device identities.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+def flatten_tree(tree: dict, prefix: str = "") -> dict:
+    """Flatten a nested dict tree to {"a/b/c": leaf} (sorted keys — the
+    same path scheme the checkpoint format uses, so specs, checkpoints and
+    live state trees all address tensors identically)."""
+    flat: dict = {}
+    for k in sorted(tree):
+        path = f"{prefix}/{k}" if prefix else str(k)
+        node = tree[k]
+        if isinstance(node, dict):
+            flat.update(flatten_tree(node, path))
+        else:
+            flat[path] = node
+    return flat
+
+
+def unflatten_tree(flat: dict) -> dict:
+    tree: dict = {}
+    for path, val in flat.items():
+        parts = path.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return tree
+
+
+class _ShapeOnlyMesh:
+    """The one attribute ``sharding.spec_for`` reads off a mesh: the
+    axis-name -> size mapping. Stands in for a real Mesh when deriving
+    layouts for configs no device set backs."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+
+
+def _canonical_axis(entry) -> str | None:
+    """Normalize one PartitionSpec entry to "data" | "model" | None.
+    Composite entries like ``("pod", "data")`` collapse onto the elastic
+    data axis (the pod axis is a second data-parallel tier)."""
+    if entry is None:
+        return None
+    names = entry if isinstance(entry, (tuple, list)) else (entry,)
+    if any(n in ("data", "pod") for n in names):
+        return "data"
+    if "model" in names:
+        return "model"
+    return None
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorLayout:
+    """One tensor of the collection: global shape + per-dim mesh axis."""
+    path: str
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]    # "data" | "model" | None per dim
+
+    def factors(self, dp: int, mp: int) -> tuple[int, ...]:
+        """How many ways each dim is split at (dp, mp)."""
+        return tuple(dp if a == "data" else mp if a == "model" else 1
+                     for a in self.axes)
+
+    def box(self, dp: int, mp: int, index: int
+            ) -> tuple[tuple[int, int], ...]:
+        """Half-open [lo, hi) interval per dim of the shard held by the
+        device at linear mesh index ``index`` (replicated dims span the
+        whole dim)."""
+        d, m = divmod(index, mp)
+        out = []
+        for dim, axis, n in zip(self.shape, self.axes,
+                                self.factors(dp, mp)):
+            coord = d if axis == "data" else m if axis == "model" else 0
+            size = dim // n
+            out.append((coord * size, (coord + 1) * size))
+        return tuple(out)
+
+    @property
+    def n_elements(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n
+
+
+@dataclasses.dataclass(frozen=True)
+class StateSpec:
+    """The whole collection at one parallelization config."""
+    dp: int
+    mp: int
+    tensors: tuple[TensorLayout, ...]
+
+    @property
+    def n_devices(self) -> int:
+        return self.dp * self.mp
+
+    def layout(self, path: str) -> TensorLayout:
+        for t in self.tensors:
+            if t.path == path:
+                return t
+        raise KeyError(path)
+
+    # -------------------------------------------------------- constructors
+    @classmethod
+    def from_shardings(cls, dp: int, mp: int, shardings, state) -> "StateSpec":
+        """Read the layout off live ``NamedSharding`` trees: ``shardings``
+        and ``state`` are matching dict trees (the trainer's
+        ``exec.state_shardings`` and its train state — abstract
+        ShapeDtypeStructs work too; only ``.shape`` is read)."""
+        flat_sh = flatten_tree(shardings)
+        flat_st = flatten_tree(state)
+        tensors = []
+        for path, sh in flat_sh.items():
+            shape = tuple(flat_st[path].shape)
+            spec = getattr(sh, "spec", sh)     # NamedSharding or raw PSpec
+            entries = tuple(spec) + (None,) * (len(shape) - len(spec))
+            axes = []
+            for dim, entry in zip(shape, entries):
+                axis = _canonical_axis(entry)
+                n = dp if axis == "data" else mp if axis == "model" else 1
+                # spec_for never emits a non-divisible mapping, but specs
+                # read from foreign checkpoints are validated here
+                axes.append(axis if n <= 1 or dim % n == 0 else None)
+            tensors.append(TensorLayout(path, shape, tuple(axes)))
+        return cls(dp, mp, tuple(tensors))
+
+    @classmethod
+    def for_trainer(cls, trainer) -> "StateSpec":
+        """The live trainer's current collection layout."""
+        return cls.from_shardings(trainer.p, trainer.model_parallel,
+                                  trainer.exec.state_shardings,
+                                  trainer.state)
+
+    @classmethod
+    def for_config(cls, cfg, optimizer, dp: int, mp: int) -> "StateSpec":
+        """Device-FREE construction: the layout a trainer at ``(dp, mp)``
+        would use, derived from the same logical-axis rules
+        (``sharding.spec_for``) the live mesh path applies — no mesh, no
+        devices, no jax arrays. This is how reshard plans are made for
+        configs that exist only on paper (property tests over every shape
+        of a small budget, planning a restore before the target trainer
+        is built)."""
+        import jax
+        from jax.sharding import PartitionSpec as P
+        from repro.models import model as M
+        from repro.sharding import spec_for
+        from repro.training.step import state_shape_structs
+        mesh = _ShapeOnlyMesh({"data": dp, "model": mp})
+        axes = M.param_logical_axes(cfg)
+        shapes = M.param_shape_structs(cfg)
+        is_axes = lambda x: isinstance(x, tuple) and all(  # noqa: E731
+            isinstance(e, (str, type(None))) for e in x)
+        params = jax.tree.map(lambda a, s: spec_for(a, s.shape, mesh),
+                              axes, shapes, is_leaf=is_axes)
+        specs = {"params": params, "step": P(),
+                 "opt": {"count": P(), "mu": params}}
+        state = state_shape_structs(cfg, optimizer)
+        if optimizer.slots >= 2:
+            specs["opt"]["nu"] = params
+        else:
+            state["opt"].pop("nu", None)
+        return cls.from_shardings(dp, mp, specs, state)
+
+    # -------------------------------------------------------- serialization
+    def to_json(self) -> dict:
+        return {"dp": self.dp, "mp": self.mp,
+                "tensors": [[t.path, list(t.shape), list(t.axes)]
+                            for t in self.tensors]}
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "StateSpec":
+        return cls(int(obj["dp"]), int(obj["mp"]), tuple(
+            TensorLayout(p, tuple(s), tuple(a))
+            for p, s, a in obj["tensors"]))

@@ -58,6 +58,61 @@ def group_size(job) -> int:
     return int(getattr(job, "mp", 1) or 1)
 
 
+# the shapes an mp=auto tenant may be reshaped through; filtered per query
+# by what the pool and the job's batch divisibility admit
+AUTO_MP_OPTIONS = (1, 2, 4)
+
+
+def mp_options(job) -> tuple[int, ...]:
+    """The model-parallel degrees a policy may target for this job: the
+    auto ladder for mp=auto tenants, the pinned degree for everyone else."""
+    if getattr(job, "mp_auto", False):
+        opts = {group_size(job), *AUTO_MP_OPTIONS}
+        return tuple(sorted(opts))
+    return (group_size(job),)
+
+
+def requested_devices(job) -> int:
+    """The job's requested footprint in DEVICES — shape-invariant: quoted
+    at the submitted degree even after a reshape changed the live one."""
+    mp = int(getattr(job, "requested_mp", 0) or group_size(job))
+    return job.requested_p * mp
+
+
+def normalize_target(job, target) -> tuple[int, int]:
+    """One policy-target format for the executors: ``(groups, mp)``.
+    Plain integer targets (every pre-reshape policy) keep the job's
+    current degree; reshape-aware policies emit explicit tuples."""
+    if isinstance(target, tuple):
+        return int(target[0]), max(1, int(target[1]))
+    return int(target), group_size(job)
+
+
+def best_shape(tm, job, devices: int, *,
+               options: tuple[int, ...] | None = None) -> tuple[int, int]:
+    """The highest-throughput ``(groups, mp)`` factorization of a device
+    budget, per the view's ThroughputModel — the ONE place reshape-aware
+    policies turn a device count into a shape. Ties (and everything
+    within half a percent) go to the LOWER mp: plain data parallelism is
+    operationally simpler and keeps rigid-prior behavior for jobs whose
+    shapes price identically. Group counts must divide the job's global
+    batch (``job.feasible_p`` when the job has one). Returns ``(0, min
+    option)`` when not even one group fits ``devices``."""
+    feasible = getattr(job, "feasible_p", lambda p: p)
+    opts = options if options is not None else mp_options(job)
+    best = None             # (throughput, mp, p)
+    for mp in sorted(opts):
+        p = feasible(devices // mp)
+        if p < 1:
+            continue
+        thr = tm.throughput(job, p, mp)
+        if best is None or thr > best[0] * 1.005:
+            best = (thr, mp, p)
+    if best is None:
+        return 0, min(opts)
+    return best[2], best[1]
+
+
 def throughput_model_of(view):
     """The ThroughputModel the view's owner schedules with. Views that
     predate the seam (plain stand-ins in tests) fall back to the shared
@@ -121,6 +176,15 @@ class MaxThroughput:
     scaling curve — a tenant whose real curve knees earlier than its
     analytic prior loses the marginal GPU to a better scaler.
 
+    mp=auto tenants get a final SHAPE pass: whatever device budget the
+    water-filling left them is re-factorized into the highest-throughput
+    ``(groups, mp)`` via ``best_shape`` — emitted as a tuple target, which
+    the live executor turns into a RESHAPE verb (and the simulator into a
+    re-mesh). A comm-bound tenant squeezed to half its devices under pool
+    pressure typically compacts onto a denser model-parallel shape; when
+    the budget comes back, the same pass expands it back to plain data
+    parallelism.
+
     Works on the simulator and the live executor alike (sched.base view
     interface).
     """
@@ -154,4 +218,24 @@ class MaxThroughput:
                 break
             alloc[best.jid] += 1
             free -= group_size(best)
-        return alloc
+        return reshape_targets(tm, jobs, alloc)
+
+
+def reshape_targets(tm, jobs, alloc: dict) -> dict:
+    """The mp re-target pass shared by the reshape-aware policies: each
+    mp=auto job's allocated DEVICE budget is re-factorized into its
+    best ``(groups, mp)`` shape. Targets whose shape differs from the
+    job's live one become tuples — ``normalize_target`` on the executor
+    side reads either form; rigid (and inelastic) jobs pass through
+    untouched, so a policy over a reshape-free workload emits exactly
+    what it always did."""
+    for j in jobs:
+        target = alloc.get(j.jid, 0)
+        if (not getattr(j, "mp_auto", False) or j.inelastic
+                or isinstance(target, tuple) or target <= 0):
+            continue
+        budget = target * group_size(j)
+        p2, mp2 = best_shape(tm, j, budget)
+        if p2 >= 1 and (p2, mp2) != (target, group_size(j)):
+            alloc[j.jid] = (p2, mp2)
+    return alloc

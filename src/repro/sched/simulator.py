@@ -37,6 +37,7 @@ class Job:
     arrival: float
     inelastic: bool = False
     mp: int = 1             # devices per group (model-parallel degree)
+    mp_auto: bool = False   # policies may RESHAPE the degree live
     # runtime state
     alloc: int = 0          # groups currently held
     remaining: float = 0.0
@@ -47,6 +48,8 @@ class Job:
 
     def __post_init__(self):
         self.remaining = self.total_samples
+        # the shape the demand was quoted at (``mp`` mutates on reshape)
+        self.requested_mp = self.mp
 
 
 @dataclasses.dataclass
@@ -107,10 +110,12 @@ class ClusterSimulator:
         return j.alloc * j.mp * tm.efficiency(j, j.alloc) if j.alloc else 0.0
 
     def _apply_alloc(self, new_alloc: dict[int, int]):
-        for jid, p in new_alloc.items():
+        from repro.sched.base import normalize_target
+        for jid, target in new_alloc.items():
             j = self.jobs[jid]
+            p, mp = normalize_target(j, target)
             old = j.alloc
-            if p == old:
+            if p == old and mp == j.mp:
                 continue
             if p == 0:          # preempted
                 j.alloc = 0
@@ -118,6 +123,11 @@ class ClusterSimulator:
                 if j.remaining > 0 and j not in self.pending:
                     self.pending.append(j)
                 continue
+            # a reshape re-meshes the job: progress continues at the new
+            # shape once the (stop-free-priced) switch window passes —
+            # throughput queries read j.mp, so flipping it here is the
+            # whole simulated state move
+            j.mp = mp
             if old == 0:
                 self.pending = [x for x in self.pending if x.jid != jid]
                 self.running[jid] = j

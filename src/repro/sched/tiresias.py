@@ -26,6 +26,16 @@ Elastic-Tiresias adds two rules:
      to the job with the largest marginal throughput gain per device,
      while positive.
 
+Live reparallelization extends the elastic variant for mp=AUTO tenants
+(jobs that do not pin their model-parallel degree): a tenant whose full
+request no longer fits is admitted at the best (groups, mp) shape of the
+devices that ARE free instead of being fully preempted (pool-shape-driven
+repacking), and a final pass re-factorizes every auto tenant's device
+budget through ``sched.base.best_shape`` — emitting ``(groups, mp)``
+tuple targets the executor turns into RESHAPE verbs. Comm-bound tenants
+compact onto denser model-parallel meshes under pressure and expand back
+to plain data parallelism when the budget returns.
+
 Policies take a *view* (repro.sched.base): the discrete-event simulator and
 the live multi-tenant executor expose the same interface, so the identical
 policy object drives simulated ticks or real ElasticTrainer scaling calls.
@@ -37,7 +47,8 @@ from __future__ import annotations
 
 import math
 
-from repro.sched.base import alive_jobs, group_size, throughput_model_of
+from repro.sched.base import alive_jobs, best_shape, group_size, \
+    requested_devices, reshape_targets, throughput_model_of
 
 
 class Tiresias:
@@ -69,22 +80,50 @@ class Tiresias:
     def __call__(self, view) -> dict[int, int]:
         jobs = [j for j in alive_jobs(view)]
         jobs.sort(key=lambda j: self._priority_key(view, j))
+        tm = throughput_model_of(view) if self.elastic else None
         alloc: dict[int, int] = {}
         free = view.n_gpus
         waiting = []
         for j in jobs:
-            need = j.requested_p * group_size(j)
+            # requested footprint is quoted in DEVICES at the SUBMITTED
+            # shape (shape-invariant): live-mp groups of a reshaped auto
+            # tenant could over- OR under-state the request (a 1-device
+            # job parked at mp=4 must not claim a whole 4-device group)
+            gs = group_size(j)
+            req_mp = int(getattr(j, "requested_mp", 0) or gs)
+            need = requested_devices(j)
             if free >= need:
-                alloc[j.jid] = j.requested_p
+                # a tenant whose live shape drifted from the submitted one
+                # gets an explicit-shape target back toward it (the shape
+                # pass may re-factorize); everyone else keeps plain groups
+                alloc[j.jid] = (j.requested_p if req_mp == gs
+                                else (j.requested_p, req_mp))
                 free -= need
-            else:
-                alloc[j.jid] = 0
-                waiting.append(j)
+                continue
+            if tm is not None and getattr(j, "mp_auto", False) \
+                    and not j.inelastic and free > 0:
+                # pool-shape-driven repacking (elastic only): an mp=auto
+                # job whose full request no longer fits is admitted at
+                # the best shape of the devices that ARE free — a running
+                # 4 x mp=1 tenant squeezed by a fresh arrival compacts
+                # onto e.g. (1, mp=2) instead of being fully preempted
+                p2, mp2 = best_shape(tm, j, min(free, need))
+                if p2 >= 1:
+                    alloc[j.jid] = (p2, mp2)
+                    free -= p2 * mp2
+                    continue
+            alloc[j.jid] = 0
+            waiting.append(j)
 
         if self.elastic:
-            tm = throughput_model_of(view)
             alloc, free = self._compact(tm, jobs, alloc, free, waiting)
             alloc = self._expand(tm, jobs, alloc, free, waiting)
+            # mp re-targets (R3, the RESHAPE rule): each mp=auto job's
+            # final device budget is re-factorized into its best shape —
+            # compaction squeezes comm-bound tenants onto denser
+            # model-parallel meshes, expansion returns them to plain data
+            # parallelism when the budget comes back
+            alloc = reshape_targets(tm, jobs, alloc)
         return alloc
 
     # ---------------------------------------------------------------- R1
@@ -92,15 +131,20 @@ class Tiresias:
         if len(waiting) <= self.N:
             return alloc, free
         for pending in list(waiting):
-            need = pending.requested_p * group_size(pending)   # in devices
+            need = requested_devices(pending)                  # in devices
             # scan running jobs (lowest priority first), shrink until the
             # pending job fits; respect G0-protection and the QoS floor.
             donors = sorted(
-                (j for j in jobs if alloc.get(j.jid, 0) > 0
+                (j for j in jobs
+                 if isinstance(alloc.get(j.jid, 0), int)
+                 and alloc.get(j.jid, 0) > 0
                  and not j.inelastic and self.group_of(j) > 0),
                 key=lambda j: -self.group_of(j))
             for d in donors:
-                floor = max(1, math.ceil(self.r * d.requested_p))
+                # QoS floor in live-shape groups (device-denominated, so a
+                # reshaped donor's floor tracks its submitted footprint)
+                floor = max(1, math.ceil(
+                    self.r * requested_devices(d) / group_size(d)))
                 while alloc[d.jid] > floor and free < need:
                     # remove the group whose removal gains the most
                     # efficiency (one group = group_size(d) devices)
@@ -113,7 +157,14 @@ class Tiresias:
                 if free >= need:
                     break
             if free >= need:
-                alloc[pending.jid] = pending.requested_p
+                # admit at the SUBMITTED shape (explicit tuple when the
+                # parked shape drifted) so exactly ``need`` devices are
+                # spent — live-mp group rounding could oversubscribe
+                gs_p = group_size(pending)
+                req_mp = int(getattr(pending, "requested_mp", 0) or gs_p)
+                alloc[pending.jid] = (
+                    pending.requested_p if req_mp == gs_p
+                    else (pending.requested_p, req_mp))
                 free -= need
                 waiting.remove(pending)
         return alloc, free
@@ -126,7 +177,10 @@ class Tiresias:
             best, best_gain = None, 0.0
             for j in jobs:
                 p, mp = alloc.get(j.jid, 0), group_size(j)
-                if p == 0 or j.inelastic or mp > free:
+                # jobs already holding a squeezed-shape tuple target sit
+                # this round out; the shape pass re-factorizes them later
+                if not isinstance(p, int) or p == 0 \
+                        or j.inelastic or mp > free:
                     continue
                 s_p = tm.throughput(j, p)
                 # relative gain per DEVICE: an mp=2 group must out-gain two

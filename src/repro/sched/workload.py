@@ -21,7 +21,11 @@ Both generators take ``mp_choices`` — a tuple of model-parallel degrees
 drawn per job — to synthesize MIXED-mp tenant populations (the
 multi-dimensional packing scenario): with ``mp_choices=(1, 2)`` roughly
 half the tenants demand 2-device groups, and ``to_cluster_specs`` carries
-the drawn mp onto the live ``JobSpec.model_parallel``.
+the drawn mp onto the live ``JobSpec.model_parallel``. The choice
+``"auto"`` draws an mp=AUTO tenant instead — it launches data-parallel
+but policies may RESHAPE its degree live (``JobSpec.mp_auto``), so
+``mp_choices=(1, "auto")`` yields a population where roughly half the
+tenants are reparallelizable.
 """
 from __future__ import annotations
 
@@ -33,8 +37,19 @@ from repro.sched.throughput import PROFILES, ThroughputModel, default_model
 MODELS = list(PROFILES)
 
 
+def _draw_mp(rng, mp_choices) -> tuple[int, bool]:
+    """One (mp, mp_auto) draw. No rng stream is consumed for a
+    single-choice tuple — the golden simulator regressions pin the
+    pre-group random stream bit-for-bit."""
+    choice = (mp_choices[rng.integers(len(mp_choices))]
+              if len(mp_choices) > 1 else mp_choices[0])
+    if choice == "auto":
+        return 1, True
+    return int(choice), False
+
+
 def synthetic_16(*, seed: int = 0, n_jobs: int = 16, interval: float = 30.0,
-                 default_p: int = 4, mp_choices: tuple[int, ...] = (1,),
+                 default_p: int = 4, mp_choices: tuple[int | str, ...] = (1,),
                  model: ThroughputModel | None = None) -> list[Job]:
     tm = model or default_model()
     rng = np.random.default_rng(seed)
@@ -43,17 +58,14 @@ def synthetic_16(*, seed: int = 0, n_jobs: int = 16, interval: float = 30.0,
         name = MODELS[rng.integers(len(MODELS))]
         # ~6 minutes of work at the default parallelism
         samples = tm.throughput(name, default_p) * rng.uniform(240, 480)
-        # no rng draw for the single-choice default: the golden simulator
-        # regressions pin the pre-group random stream bit-for-bit
-        mp = int(mp_choices[rng.integers(len(mp_choices))]
-                 if len(mp_choices) > 1 else mp_choices[0])
+        mp, auto = _draw_mp(rng, mp_choices)
         jobs.append(Job(i, name, default_p, samples, arrival=i * interval,
-                        mp=mp))
+                        mp=mp, mp_auto=auto))
     return jobs
 
 
 def philly_like(*, seed: int = 0, n_jobs: int = 400, mean_iat: float = 18.0,
-                mp_choices: tuple[int, ...] = (1,),
+                mp_choices: tuple[int | str, ...] = (1,),
                 model: ThroughputModel | None = None) -> list[Job]:
     tm = model or default_model()
     rng = np.random.default_rng(seed)
@@ -70,9 +82,9 @@ def philly_like(*, seed: int = 0, n_jobs: int = 400, mean_iat: float = 18.0,
                            p=[.3, .15, .1, .15, .1, .08, .06, .04, .02]))
         name = MODELS[rng.integers(len(MODELS))]
         samples = tm.throughput(name, p) * (gpu_seconds / p)
-        mp = int(mp_choices[rng.integers(len(mp_choices))]
-                 if len(mp_choices) > 1 else mp_choices[0])
-        jobs.append(Job(i, name, p, samples, arrival=t, mp=mp))
+        mp, auto = _draw_mp(rng, mp_choices)
+        jobs.append(Job(i, name, p, samples, arrival=t, mp=mp,
+                        mp_auto=auto))
     return jobs
 
 
@@ -117,7 +129,8 @@ def to_cluster_specs(jobs: list[Job], *, devices: int = 4, batch: int = 12,
                 batch, max(1, min(j.requested_p, devices // mp))),
             total_steps=int(round(lo + z * (hi - lo))),
             arrival=round(float(j.arrival - t0) / arrival_scale, 2),
-            inelastic=j.inelastic, model_parallel=mp, global_batch=batch,
+            inelastic=j.inelastic, model_parallel=mp,
+            mp_auto=getattr(j, "mp_auto", False), global_batch=batch,
             seq_len=seq_len, n_samples=n_samples,
             d_partitions=d_partitions, seed=j.jid))
     return specs

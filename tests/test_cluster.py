@@ -20,7 +20,7 @@ import pytest
 
 from repro.cluster.executor import ClusterExecutor
 from repro.cluster.job import ClusterJob, JobSpec, JobState
-from repro.cluster.policy import make_policy, plan_actions
+from repro.cluster.policy import ScriptedPolicy, make_policy, plan_actions
 from repro.core.profiling import ProfileTable, profile
 from repro.core.scaling import Phase
 from repro.sched.base import MaxThroughput
@@ -123,6 +123,26 @@ class FakeTrainer:
     def migrate(self, n=1, *, victims=None, block=False):
         self._flagged_stragglers = []
 
+    def reshape(self, p, mp, *, new_devices=None, block=False,
+                release=False):
+        """Instant-commit RESHAPE double: same device arithmetic as the
+        real verb (grant first, release surplus at 'commit')."""
+        if new_devices:
+            self.devices.extend(new_devices)
+        assert p >= 1 and mp >= 1 and p * mp <= len(self.devices)
+        assert self.spec.global_batch % p == 0
+        self.model_parallel = mp
+        self._p = p
+        if release and len(self.devices) > p * mp:
+            freed = self.devices[p * mp:]
+            self.devices = self.devices[:p * mp]
+            if self.on_devices_released:
+                self._releasing_op = "reshape"
+                try:
+                    self.on_devices_released(self, freed)
+                finally:
+                    self._releasing_op = None
+
 
 class FakeCheckpointer:
     """Executor checkpointer-protocol double: snapshots the fake trainer's
@@ -146,21 +166,6 @@ class FakeCheckpointer:
 
     def restore(self, job, trainer):
         trainer.step_count = self.saved[job.jid]
-
-
-class ScriptedPolicy:
-    """Deterministic allocation script {round: {jid: p}}; between scripted
-    rounds the most recent entry keeps applying (before the first entry,
-    keep-current)."""
-
-    def __init__(self, script):
-        self.script = dict(script)
-
-    def __call__(self, view):
-        past = [r for r in self.script if r <= view.now]
-        if past:
-            return self.script[max(past)]
-        return {j.jid: j.alloc for j in view.running.values()}
 
 
 def run_fake_cluster(specs, policy, *, rounds=40, resched_every=2,
@@ -468,7 +473,7 @@ def test_partial_grant_lands_on_feasible_parallelism():
     ex = ClusterExecutor(specs, make_policy("static"),
                          devices=list(range(6)), trainer_factory=FakeTrainer)
     ex.run(max_rounds=2)            # a=2, hog=1 -> 3 free
-    ex._wants[0] = 6
+    ex._wants[0] = (6, 1)           # wants are (groups, mp)
     ex._satisfy_wants()
     assert ex.jobs[0].alloc == 4
     ex._assert_conserved()
@@ -632,6 +637,174 @@ def test_executor_profile_sweep_borrows_whole_groups():
     ex._assert_conserved()
 
 
+# ------------------------------------- live reparallelization (RESHAPE)
+def test_plan_actions_emits_reshape_for_mp_retarget():
+    """A tuple target whose mp differs from the running job's live degree
+    becomes a reshape action — on the shrink side of the ledger when the
+    footprint does not grow, so its freed devices fund grows."""
+    j = ClusterJob(0, JobSpec("flex", 4, 20, global_batch=12, mp_auto=True))
+    j.trainer = FakeTrainer(j.spec, [0, 1, 2, 3])
+    other = ClusterJob(1, JobSpec("b", 2, 20, global_batch=12))
+    acts = plan_actions({0: j, 1: other}, {0: (1, 2), 1: 2}, 4)
+    kinds = [(a.kind, a.jid) for a in acts]
+    assert kinds[0] == ("reshape", 0), "footprint-shrinking reshape first"
+    assert acts[0].target_p == 1 and acts[0].target_mp == 2
+    assert kinds[1] == ("start", 1), "the freed devices fund the start"
+    # footprint-growing reshape sorts with the grows (and the group count
+    # is clamped to batch divisibility: 8 -> 6 for a global batch of 12)
+    grow = plan_actions({0: j}, {0: (8, 2)}, 16)
+    assert grow[0].kind == "reshape" and grow[0].target_p == 6
+
+
+def test_plan_actions_never_reshapes_rigid_tenants():
+    """A (groups, mp) tuple against an mp-rigid job is reinterpreted as a
+    device budget at the pinned degree — the spec's 'rigid tenants keep
+    their degree for life' contract holds against any policy output."""
+    j = ClusterJob(0, JobSpec("rigid", 4, 20, global_batch=12))
+    j.trainer = FakeTrainer(j.spec, [0, 1, 2, 3])
+    acts = plan_actions({0: j}, {0: (1, 2)}, 4)     # 2-device budget
+    assert [a.kind for a in acts] == ["scale_in"]
+    assert acts[0].target_p == 2, "the budget lands at the pinned mp=1"
+
+
+def test_scripted_reshape_shrink_frees_devices_for_admission():
+    """RESHAPE (4, mp=1) -> (1, mp=2): the re-mesh halves the job's
+    footprint; the 2 freed devices come home through the release hook and
+    fund the waiting tenant's admission. Conservation in devices holds
+    throughout and the job's live mp flips."""
+    pol = ScriptedPolicy({2: {0: (1, 2), 1: 2}})
+    specs = [JobSpec("flex", 4, 60, profile="vgg19", mp_auto=True),
+             JobSpec("b", 2, 30, profile="googlenet", arrival=1.0)]
+    ex = ClusterExecutor(specs, pol, devices=list(range(4)),
+                         resched_every=2, trainer_factory=FakeTrainer,
+                         checkpointer=FakeCheckpointer())
+    stats = ex.run(max_rounds=12)
+    flex = ex.jobs[0]
+    re_ = _find(stats["events"], "reshape", "flex")
+    assert re_ and re_[0]["from_p"] == 4 and re_[0]["to_p"] == 1
+    assert re_[0]["from_mp"] == 1 and re_[0]["to_mp"] == 2
+    assert flex.mp == 2 and flex.alloc == 1 and flex.devices_held == 2
+    freed = _find(stats["events"], "reshape_release", "flex")
+    assert freed and len(freed[0]["devices"]) == 2, \
+        "the footprint shrink releases exactly the surplus devices"
+    assert not _find(stats["events"], "scale_in", "flex"), \
+        "a reshape surplus must not masquerade as a data-parallel scale_in"
+    b_start = _find(stats["events"], "scale_out", "b")
+    assert b_start and b_start[0]["from_p"] == 0, \
+        "the freed devices admit the waiting tenant"
+    assert stats["events"].index(re_[0]) < stats["events"].index(b_start[0])
+    assert stats["reshapes"] == 1 and stats["conserved"]
+
+
+def test_scripted_reshape_grow_grants_devices_up_front():
+    """RESHAPE (1, mp=2) -> (4, mp=1): the footprint doubles; the delta is
+    granted from the free pool on the reshape event itself (ownership
+    moves at request, like any grant)."""
+    pol = ScriptedPolicy({2: {0: (4, 1)}})
+    specs = [JobSpec("flex", 1, 60, profile="vgg19", model_parallel=2,
+                     mp_auto=True)]
+    ex = ClusterExecutor(specs, pol, devices=list(range(4)),
+                         resched_every=2, trainer_factory=FakeTrainer,
+                         checkpointer=FakeCheckpointer())
+    stats = ex.run(max_rounds=8)
+    flex = ex.jobs[0]
+    re_ = _find(stats["events"], "reshape", "flex")
+    assert re_ and (re_[0]["from_p"], re_[0]["to_p"]) == (1, 4)
+    assert (re_[0]["from_mp"], re_[0]["to_mp"]) == (2, 1)
+    assert len(re_[0]["devices"]) == 2, "the grant rides the reshape event"
+    assert flex.mp == 1 and flex.alloc == 4 and len(ex.free) == 0
+    assert stats["conserved"]
+
+
+def test_reshape_short_on_devices_waits_as_want():
+    """A footprint-growing reshape with nothing free parks as a want and
+    fires once another job's finish frees the devices."""
+    pol = ScriptedPolicy({2: {0: (4, 1), 1: 1}})
+    specs = [JobSpec("flex", 1, 60, profile="vgg19", model_parallel=2,
+                     mp_auto=True),
+             JobSpec("short", 2, 3, profile="googlenet")]
+    ex = ClusterExecutor(specs, pol, devices=list(range(4)),
+                         resched_every=2, trainer_factory=FakeTrainer,
+                         checkpointer=FakeCheckpointer())
+    stats = ex.run(max_rounds=16)
+    fin = _find(stats["events"], "finish", "short")
+    re_ = _find(stats["events"], "reshape", "flex")
+    assert fin and re_, "the reshape must wait for the finish"
+    assert re_[0]["round"] >= fin[0]["round"]
+    assert ex.jobs[0].mp == 1 and ex.jobs[0].alloc == 4
+    assert stats["conserved"]
+
+
+def test_preempted_auto_job_readmits_onto_different_mp():
+    """The checkpoint fallback path at the executor level: an mp=auto job
+    preempted at (2, mp=1) is re-admitted at (1, mp=2) — the restore lands
+    on a different degree than the save, step counter intact."""
+    pol = ScriptedPolicy({2: {0: 0, 1: 4},      # preempt flex, grow b
+                          6: {0: (1, 2), 1: 2}})  # readmit at mp=2
+    specs = [JobSpec("flex", 2, 30, profile="vgg19", mp_auto=True),
+             JobSpec("b", 2, 60, profile="googlenet")]
+    ex = ClusterExecutor(specs, pol, devices=list(range(4)),
+                         resched_every=2, trainer_factory=FakeTrainer,
+                         checkpointer=FakeCheckpointer())
+    stats = ex.run(max_rounds=20)
+    flex = ex.jobs[0]
+    assert _find(stats["events"], "preempt", "flex")
+    re_ = _find(stats["events"], "readmit", "flex")
+    assert re_ and re_[0]["to_p"] == 1 and re_[0]["mp"] == 2, \
+        "re-admission lands one 2-device group"
+    assert len(re_[0]["devices"]) == 2
+    assert flex.trainer.model_parallel == 2
+    steps = [m["step"] for m in flex.trainer.metrics_log]
+    assert steps == list(range(steps[0], steps[0] + len(steps))), \
+        "step counter continues across the cross-shape round trip"
+    assert stats["conserved"]
+
+
+def test_elastic_tiresias_compacts_auto_tenant_live_under_pressure():
+    """End-to-end policy flow on the fake executor: a fresh arrival
+    squeezes the running mp=auto vgg tenant — instead of a full
+    preemption it RESHAPEs onto the denser (1, mp=2) mesh, freeing half
+    its devices for the newcomer; when the newcomer finishes, the tenant
+    reshapes back toward plain data parallelism."""
+    specs = [JobSpec("flex", 4, 200, profile="vgg19", mp_auto=True),
+             JobSpec("goog", 2, 8, profile="googlenet", arrival=4.0)]
+    pol = make_policy("elastic-tiresias", quanta=(0.5, 50.0))
+    ex, stats = run_fake_cluster(specs, pol, rounds=60)
+    compact = [e for e in _find(stats["events"], "reshape", "flex")
+               if e["to_mp"] == 2]
+    assert compact and compact[0]["from_p"] == 4 and \
+        compact[0]["to_p"] == 1, "pressure compacts (4,1) -> (1,2)"
+    assert not _find(stats["events"], "preempt", "flex"), \
+        "the flexible tenant is reshaped, not checkpoint-stopped"
+    g_start = _find(stats["events"], "scale_out", "goog")
+    assert g_start and g_start[0]["from_p"] == 0, \
+        "the freed half funds the arrival"
+    fin = _find(stats["events"], "finish", "goog")
+    expand = [e for e in _find(stats["events"], "reshape", "flex")
+              if e["to_mp"] == 1 and e["round"] > fin[0]["round"]]
+    assert expand, "freed devices expand the tenant back to mp=1"
+    assert ex.jobs[0].mp == 1 and ex.jobs[0].alloc == 4
+    assert stats["conserved"]
+
+
+def test_parse_jobs_mp_auto_grammar():
+    from repro.launch.cluster import parse_jobs
+    kw = dict(batch=12, seq=64, n_samples=1 << 10, d_partitions=16)
+    specs = parse_jobs("flex=vgg19:4:20:mp=auto@0,b=resnet50:1:8:mp=2@0",
+                       **kw)
+    assert specs[0].mp_auto and specs[0].model_parallel == 1
+    assert not specs[1].mp_auto and specs[1].model_parallel == 2
+
+
+def test_workload_auto_mp_choice_draws_reshapeable_tenants():
+    from repro.launch.cluster import parse_workload
+    specs = parse_workload("trace=philly seed=1 jobs=8 steps=4:8 mp=1:auto",
+                           devices=4, batch=12, seq=64, n_samples=1 << 10,
+                           d_partitions=16)
+    assert any(s.mp_auto for s in specs), "some tenants must be mp=auto"
+    assert all(s.model_parallel == 1 for s in specs if s.mp_auto)
+
+
 # ------------------------------------------- profiling sweeps (EDL §5.2)
 def test_profile_restores_parallelism_and_returns_table():
     """Bugfix regression: profile() used to leave the trainer parked at
@@ -680,6 +853,29 @@ def test_executor_profile_sweeps_prefill_measured_curves():
         "the sweep's borrowed devices are a transient loan (requested 2, " \
         "swept at 4)"
     assert len(prof) == 1, "each job is swept at most once"
+    ex._assert_conserved()
+
+
+def test_profile_ttl_resweeps_stale_curves():
+    """Satellite: with a finite profile_ttl the executor re-sweeps a job
+    once its measured curve ages out (default stays once-per-lifetime —
+    asserted by test_executor_profile_sweeps_prefill_measured_curves)."""
+    mm = MeasuredModel()
+    ex = ClusterExecutor([JobSpec("a", 2, 200, profile="resnet50")],
+                         make_policy("static"), devices=list(range(4)),
+                         trainer_factory=FakeTrainer,
+                         checkpointer=FakeCheckpointer(),
+                         throughput_model=mm, profile_sweeps=True,
+                         profile_ttl=4.0)
+    ex.run(max_rounds=12)
+    prof = [e for e in ex.events if e["op"] == "profile"]
+    assert len(prof) >= 2, "the stale curve must be re-swept"
+    assert prof[1]["round"] - prof[0]["round"] >= 4, \
+        "re-sweep waits out the TTL"
+    job = ex.jobs[0]
+    assert mm.n_observations(job)[4] >= 2, \
+        "the re-sweep re-ingests into the same EMA stream"
+    assert job.alloc == 2 and len(ex.free) == 2
     ex._assert_conserved()
 
 
@@ -936,6 +1132,142 @@ def test_live_cluster_mixed_mp_tenants_conserve_device_groups():
                if e["op"] == "scale_out" and e["from_p"] > 0
                or e["op"] == "scale_in"]
     assert resizes, "the mp=2 tenant must scale live (whole groups)"
+
+
+@pytest.mark.slow
+def test_live_reshape_round_trip_stop_free_with_device_audit():
+    """Acceptance: the executor drives a REAL trainer through RESHAPE
+    (dp=4, mp=1) -> (dp=2, mp=2) -> (dp=1, mp=2) -> (dp=4, mp=1) at
+    mini-batch boundaries, stop-free (training continues through every
+    background context prep). Step counters, optimizer state and the
+    data pipeline's exactly-once accounting survive every re-mesh, and
+    whole-group device conservation is asserted from the event audit
+    (the shrink frees a whole group, the expand-back grants it back)."""
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+    " --xla_force_host_platform_device_count=4"
+import json
+import jax
+from repro.cluster import ClusterExecutor, JobSpec
+from repro.cluster.executor import default_trainer_factory
+
+SHAPES = [(2, 2), (1, 2), (4, 1)]
+
+class ReshapeDriver:
+    # target the next shape once the previous one committed: robust to
+    # compile latency (Busy reshapes are simply re-planned)
+    def __init__(self):
+        self.stage = 0
+    def __call__(self, view):
+        if not view.running:
+            return {}
+        j = next(iter(view.running.values()))
+        if self.stage < len(SHAPES) and (j.alloc, j.mp) == SHAPES[self.stage]:
+            self.stage += 1
+        if self.stage < len(SHAPES):
+            return {j.jid: SHAPES[self.stage]}
+        return {j.jid: (j.alloc, j.mp)}
+
+spec = JobSpec("flex", 4, 250, profile="vgg19", mp_auto=True,
+               global_batch=12, seq_len=32, n_samples=1 << 10,
+               d_partitions=16)
+ex = ClusterExecutor([spec], ReshapeDriver(), resched_every=2)
+stats = ex.run(max_rounds=2000)
+job = ex.jobs[0]
+tr = job.trainer
+out = {
+    "stats": {k: stats[k] for k in ("reshapes", "conserved", "finished")},
+    "events": stats["events"],
+    "job": job.summary(),
+    "samples_seen": tr.samples_seen,
+    "opt_count": int(jax.device_get(tr.state["opt"]["count"])),
+    "reshape_records": [r.summary() for r in tr.controller.history
+                        if r.op == "reshape"],
+}
+ex.close()
+print(json.dumps(out))
+"""
+    env = {**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")}
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, env=env,
+                         cwd=ROOT, timeout=1800)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+
+    assert res["stats"]["conserved"] is True
+    assert res["stats"]["finished"] == 1
+    # the middle (2,2)->(1,2) step keeps the degree, so it is correctly a
+    # plain mp=2 scale_in, not a reshape — two true re-meshes round-trip
+    assert res["stats"]["reshapes"] == 2
+    shapes = [((e["from_p"], e["from_mp"]), (e["to_p"], e["to_mp"]))
+              for e in res["events"] if e["op"] == "reshape"]
+    assert shapes == [((4, 1), (2, 2)), ((1, 2), (4, 1))], shapes
+
+    # stop-free: training continued through every real context prep, and
+    # the switch window is far below the prep it hides
+    recs = res["reshape_records"]
+    assert len(recs) == 2
+    assert any(r["steps_during_prep"] >= 1 for r in recs), recs
+    assert all(r["stop_s"] < 1.0 for r in recs), recs
+    assert all(r["reshard_bytes_moved"] > 0 for r in recs)
+
+    # continuity: step counter, optimizer state, exactly-once accounting
+    assert res["job"]["steps_done"] == 250
+    assert res["job"]["final_step"] == 250
+    assert res["opt_count"] == 250, "optimizer state survived every re-mesh"
+    assert res["samples_seen"] == 250 * 12, \
+        "exactly-once data accounting: every step consumed one global batch"
+    assert res["job"]["final_loss"] is not None
+    assert res["job"]["reshapes"] == 2 and res["job"]["mp_now"] == 1
+
+    # whole-group device audit from the events alone
+    owned = set()
+    for e in res["events"]:
+        devs = set(e.get("devices", []))
+        if e["op"] in ("scale_out", "readmit"):
+            assert not devs & owned
+            owned |= devs
+        elif e["op"] == "reshape" and devs:
+            assert not devs & owned, "a grant must come from outside"
+            owned |= devs
+        elif e["op"] in ("scale_in", "reshape_release", "preempt",
+                         "finish"):
+            assert devs <= owned, "cannot free devices the job never owned"
+            owned -= devs
+        if devs:
+            assert len(devs) % e["mp"] == 0 or e["op"] == "reshape", \
+                f"partial-group movement: {e}"
+    assert owned == set(), "every granted device must come home"
+    shrink = [e for e in res["events"] if e["op"] == "scale_in"]
+    assert shrink and len(shrink[0]["devices"]) == 2, \
+        "the (2,2)->(1,2) shrink frees exactly one whole 2-device group"
+    grow = [e for e in res["events"]
+            if e["op"] == "reshape" and e.get("devices")]
+    assert grow and len(grow[0]["devices"]) == 2, \
+        "the (1,2)->(4,1) expand-back grants the group back"
+
+
+@pytest.mark.slow
+def test_reshape_bench_beats_checkpoint_stop_resume():
+    """`cluster_bench --reshape` contract: the in-memory RESHAPE's stop
+    window is strictly below checkpoint-stop-resume on the SAME
+    (4,1)->(2,2) transition, and the CSV lines are emitted."""
+    cmd = [sys.executable, "benchmarks/cluster_bench.py", "--reshape"]
+    env = {**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")}
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                         cwd=ROOT, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "reshape_in_memory_stop," in out.stdout
+    assert "reshape_checkpoint_stop," in out.stdout
+    with open(os.path.join(ROOT, "experiments", "bench_reshape.json")) as f:
+        res = json.load(f)
+    assert res["reshape_beats_checkpoint"] is True
+    assert res["in_memory"]["stop_s"] < res["checkpoint"]["stop_s"]
+    assert res["in_memory"]["from_mp"] == 1
+    assert res["in_memory"]["to_mp"] == 2
 
 
 @pytest.mark.slow

@@ -159,6 +159,154 @@ def test_measured_model_flips_max_throughput_water_filling():
         "measured curves must flip the water-filling decision"
 
 
+# --------------------------- mp-aware throughput (RESHAPE pricing)
+def test_analytic_model_mp_shapes_trade_off():
+    """The model-parallel axis prices real trade-offs: on the SAME device
+    budget a comm-bound model (vgg19: big gradient allreduce) prefers the
+    denser (1, mp=2) shape, a compute-bound one (googlenet) prefers plain
+    data parallelism — and mp=1 queries are the unchanged legacy curve."""
+    am = AnalyticModel()
+    # 2-device budget
+    assert am.throughput("vgg19", 1, 2) > am.throughput("vgg19", 2, 1)
+    assert am.throughput("googlenet", 2, 1) > am.throughput("googlenet", 1, 2)
+    # explicit mp=1 is the default curve bit-for-bit
+    for p in (1, 2, 4, 8):
+        assert am.throughput("vgg19", p, 1) == am.throughput("vgg19", p)
+    # efficiency normalizes within the same-mp curve
+    assert 0.0 < am.efficiency("vgg19", 2, 2) <= 1.0
+
+
+def test_best_shape_factorizes_device_budgets():
+    from repro.sched.base import best_shape
+
+    class _AutoJob(_FakeJob):
+        mp_auto, mp, inelastic = True, 1, False
+
+        def feasible_p(self, p):
+            while p > 0 and 12 % p:
+                p -= 1
+            return p
+
+    am = AnalyticModel()
+    vgg, goog = _AutoJob(1, "vgg19"), _AutoJob(2, "googlenet")
+    assert best_shape(am, vgg, 2) == (1, 2), \
+        "comm-bound tenant compacts onto the dense shape at 2 devices"
+    assert best_shape(am, goog, 2) == (2, 1)
+    assert best_shape(am, vgg, 4) == (4, 1), \
+        "with the full budget back, plain data parallelism wins again"
+    assert best_shape(am, vgg, 0) == (0, 1)
+
+
+def test_measured_model_keeps_per_shape_curves():
+    """Observations land in the (job, mp) curve: a reshaped tenant
+    re-learns its new shape without polluting the old curve, and an
+    unvisited shape borrows the measured/prior calibration."""
+    am = AnalyticModel()
+    mm = MeasuredModel(prior=am)
+    job = _FakeJob(7, "vgg19")
+    for _ in range(30):
+        mm.observe(job, 2, 0.1, mp=1)          # 120/s at (2, mp=1)
+        mm.observe(job, 1, 0.05, mp=2)         # 240/s at (1, mp=2)
+    assert mm.throughput(job, 2, 1) == pytest.approx(120.0)
+    assert mm.throughput(job, 1, 2) == pytest.approx(240.0)
+    assert mm.curve(job, 1) == {2: pytest.approx(120.0)}
+    assert mm.curve(job, 2) == {1: pytest.approx(240.0)}
+    # unvisited shape: prior rescaled by the job's cross-shape ratios
+    virgin_mp4 = mm.throughput(job, 1, 4)
+    assert virgin_mp4 != am.throughput(job, 1, 4), \
+        "the unvisited shape must borrow the measured calibration"
+
+
+def test_elastic_tiresias_emits_mp_retargets_for_auto_jobs():
+    """R3 (the RESHAPE rule): an mp=auto donor squeezed by compaction is
+    re-targeted onto the denser shape of its reduced budget; rigid jobs
+    keep plain integer targets."""
+    from repro.sched.simulator import Job as SimJob
+
+    class _View:
+        n_gpus = 4
+        now = 100.0
+        throughput_model = AnalyticModel()
+
+        def __init__(self, running, pending):
+            self.running = {j.jid: j for j in running}
+            self.pending = list(pending)
+
+    flex = SimJob(0, "vgg19", 4, 1e5, 0.0, mp_auto=True)
+    flex.alloc, flex.attained_gpu_s = 4, 50.0   # demoted below G0
+    goog = SimJob(1, "googlenet", 2, 1e5, 90.0)
+    goog.attained_gpu_s = 50.0      # also demoted: waits behind flex
+    alloc = ElasticTiresias(N=0, quanta=(1.0, 1e4))(_View([flex], [goog]))
+    assert alloc[1] == 2, "the pending job is admitted via compaction"
+    assert alloc[0] == (1, 2), \
+        "the squeezed auto donor compacts onto the dense mp=2 shape"
+
+
+def test_tiresias_quotes_reshaped_tenant_at_submitted_shape():
+    """Regression: a 1-device tenant whose live shape drifted to mp=4
+    must NOT claim a whole 4-device group as its base demand — demand is
+    quoted at the submitted shape and the target steers back toward it."""
+    from repro.sched.simulator import Job as SimJob
+
+    class _View:
+        n_gpus = 4
+        now = 0.0
+        throughput_model = AnalyticModel()
+
+        def __init__(self, jobs):
+            self.running = {j.jid: j for j in jobs if j.alloc}
+            self.pending = [j for j in jobs if not j.alloc]
+
+    small = SimJob(0, "googlenet", 1, 1e5, 0.0, mp_auto=True)
+    small.mp = 4                     # reshaped/parked at a denser shape
+    small.alloc = 1
+    other = SimJob(1, "resnet50", 2, 1e5, 1.0)
+    alloc = ElasticTiresias(N=0)(_View([small, other]))
+    assert alloc[0] == (1, 1), \
+        "the drifted tenant is re-targeted to its submitted 1-device shape"
+    assert alloc[1] >= 2, "the 2-device tenant must not be starved"
+
+
+def test_simulator_runs_auto_mp_reshape_targets():
+    """Tuple targets flow through the discrete-event simulator: mp=auto
+    jobs re-mesh live (Job.mp flips) and everything still finishes with
+    device capacity respected."""
+    am = AnalyticModel()
+    jobs = [Job(0, "vgg19", 4, am.throughput("vgg19", 4) * 400, 0.0,
+                mp_auto=True),
+            Job(1, "googlenet", 2, am.throughput("googlenet", 2) * 300,
+                30.0),
+            Job(2, "vgg16", 2, am.throughput("vgg16", 2) * 300, 60.0,
+                mp_auto=True)]
+    shapes = []
+
+    pol = ElasticTiresias(N=0, quanta=(500.0, 1e5))
+
+    def spy(sim):
+        alloc = pol(sim)
+        used = 0
+        for jid, t in alloc.items():
+            p, mp = (t if isinstance(t, tuple) else (t, sim.jobs[jid].mp))
+            used += p * mp
+            if isinstance(t, tuple):
+                shapes.append((jid, t))
+        assert used <= sim.n_gpus, f"device over-allocation: {used}"
+        return alloc
+
+    stats = ClusterSimulator(4, jobs, spy).run()
+    assert stats["finished"] == 3
+    assert shapes, "the run must exercise at least one reshape target"
+    assert any(mp > 1 for _, (_, mp) in shapes)
+
+
+def test_workload_draws_auto_mp_tenants():
+    jobs = philly_like(seed=3, n_jobs=12, mp_choices=(1, "auto"))
+    assert any(j.mp_auto for j in jobs) and any(not j.mp_auto for j in jobs)
+    assert all(j.mp == 1 for j in jobs if j.mp_auto)
+    specs = to_cluster_specs(jobs, devices=4, batch=12, steps=(4, 8))
+    assert any(s.mp_auto for s in specs)
+
+
 # --------------------------- device groups (model-parallel tenants)
 def test_max_throughput_budgets_devices_not_groups():
     """An mp=2 tenant's marginal replica costs 2 devices: it cannot take a
