@@ -2,7 +2,7 @@
 PY ?= python
 
 .PHONY: test test-fast docs-check cluster-demo bench-cluster bench-smoke \
-	bench-reshape
+	bench-reshape bench-reshape-det
 
 # the tier-1 command: full suite, fail fast
 test:
@@ -27,6 +27,11 @@ bench-cluster:
 # transition (the live-reparallelization overhead claim)
 bench-reshape:
 	PYTHONPATH=src $(PY) benchmarks/cluster_bench.py --reshape
+
+# determinism mode: the same reshape with virtual workers on must produce
+# ZERO loss-trajectory divergence vs the static run (bitwise elasticity)
+bench-reshape-det:
+	PYTHONPATH=src $(PY) benchmarks/cluster_bench.py --reshape-determinism
 
 # tiny live config under BOTH throughput models (analytic priors vs live
 # measured curves); the same contract runs in the tier-1 suite as the

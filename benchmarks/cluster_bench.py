@@ -24,12 +24,18 @@ everything down, rebuild at the new shape, restore). Reported stop times
 are the windows training is actually paused; the in-memory path must
 come in strictly below the checkpoint path on the same transition.
 
+``--reshape-determinism`` runs the bitwise-elasticity check on the same
+transition: with a fixed virtual-worker count the reshaped run's loss
+trajectory must equal the static run's EXACTLY (max divergence 0.0);
+any divergence is a regression and the bench exits nonzero.
+
   PYTHONPATH=src python benchmarks/cluster_bench.py
   PYTHONPATH=src python benchmarks/cluster_bench.py \
       --throughput-model measured --policies throughput
   PYTHONPATH=src python benchmarks/cluster_bench.py --devices 8 \
       --policies throughput --model-parallel 2
   PYTHONPATH=src python benchmarks/cluster_bench.py --reshape
+  PYTHONPATH=src python benchmarks/cluster_bench.py --reshape-determinism
 """
 import argparse
 import os
@@ -88,6 +94,53 @@ def run_reshape_bench(args):
           f"{'OK' if results['reshape_beats_checkpoint'] else 'REGRESSION'}")
 
 
+def run_reshape_determinism_bench(args):
+    """Determinism mode of the reshape bench: with virtual workers on, a
+    live RESHAPE (4,1) -> (2,2) mid-run must produce ZERO loss-trajectory
+    divergence against the static run — bitwise, not tolerance-equal.
+    Writes experiments/bench_reshape_determinism.json."""
+    import jax
+    from common import make_trainer  # noqa: E402 (benchmarks path)
+
+    nv, steps = 8, 10
+    from_shape, to_shape = (4, 1), (2, 2)
+
+    def fresh():
+        return make_trainer(from_shape[0], batch=8, seq=64,
+                            devices=jax.devices(), seed=0,
+                            virtual_workers=nv, time_allowance_s=0.1)
+
+    static = fresh()
+    static.run(steps)
+    ref = [m["loss"] for m in static.metrics_log]
+
+    tr = fresh()
+    tr.run(4)
+    tr.reshape(*to_shape, release=False)
+    rec = tr.wait_for_scaling()
+    while tr.step_idx < steps:
+        tr.step()
+    got = [m["loss"] for m in tr.metrics_log][:steps]
+
+    divergence = max(abs(a - b) for a, b in zip(ref, got))
+    results = {
+        "virtual_workers": nv,
+        "transition": {"from": list(from_shape), "to": list(to_shape)},
+        "static_trajectory": ref,
+        "reshaped_trajectory": got,
+        "max_divergence": divergence,
+        "bitwise_identical": ref == got,
+        "reshape": rec.summary() if rec else None,
+    }
+    emit("reshape_determinism_divergence", divergence * 1e6,
+         f"bitwise={results['bitwise_identical']}")
+    save("reshape_determinism", results)
+    print(f"reshape {from_shape} -> {to_shape} with {nv} virtual workers: "
+          f"max trajectory divergence {divergence} — "
+          f"{'OK (bitwise)' if results['bitwise_identical'] else 'REGRESSION'}")
+    return 0 if results["bitwise_identical"] else 1
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--devices", type=int, default=4)
@@ -107,6 +160,11 @@ def main():
                     help="run the live-reparallelization overhead scenario "
                          "(in-memory RESHAPE vs checkpoint-stop-resume) "
                          "instead of the policy sweep")
+    ap.add_argument("--reshape-determinism", action="store_true",
+                    help="determinism mode: the same (4,1) -> (2,2) live "
+                         "reshape with virtual workers on must produce "
+                         "ZERO loss-trajectory divergence vs the static "
+                         "run (exit 1 on any divergence)")
     ap.add_argument("--max-rounds", type=int, default=300)
     ap.add_argument("--compile-cache", default=None, metavar="DIR")
     args = ap.parse_args()
@@ -115,6 +173,8 @@ def main():
         "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.devices}")
     if args.reshape:
         return run_reshape_bench(args)
+    if args.reshape_determinism:
+        return run_reshape_determinism_bench(args)
     from repro.cluster import ClusterExecutor, make_policy
     from repro.launch.cluster import parse_jobs
     from repro.sched.throughput import AnalyticModel, MeasuredModel
@@ -168,4 +228,4 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

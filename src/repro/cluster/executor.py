@@ -107,7 +107,7 @@ def default_trainer_factory(spec: JobSpec, devices: list):
         model_parallel=spec.model_parallel, optimizer=adamw(spec.lr),
         n_samples=spec.n_samples, d_partitions=spec.d_partitions,
         job_handle=spec.name, seed=spec.seed, devices=devices,
-        time_allowance_s=0.1)
+        virtual_workers=spec.virtual_workers, time_allowance_s=0.1)
 
 
 class DiskCheckpointer:

@@ -28,16 +28,19 @@ import dataclasses
 import enum
 
 
-def feasible_parallelism(global_batch: int, target: int) -> int:
+def feasible_parallelism(global_batch: int, target: int,
+                         n_virtual: int = 0) -> int:
     """Largest parallelism <= target the live trainer can actually run at
     (the global batch must divide evenly across the data-parallel
     replicas — ``target`` is in GROUPS, not devices); 0 when target < 1.
-    The ONE implementation of the feasibility clamp — ClusterJob, workload
-    spec synthesis, and anything sizing grants all share it."""
+    Deterministic tenants additionally require p to divide their fixed
+    virtual-worker count ``n_virtual`` (contiguous equal blocks at every
+    shape). The ONE implementation of the feasibility clamp — ClusterJob,
+    workload spec synthesis, and anything sizing grants all share it."""
     if target < 1:
         return 0
     p = target
-    while global_batch % p:
+    while global_batch % p or (n_virtual and n_virtual % p):
         p -= 1
     return p
 
@@ -83,6 +86,15 @@ class JobSpec:
     n_samples: int = 1 << 10
     d_partitions: int = 16
     seed: int = 0
+    # deterministic elasticity (spec grammar ``:vw=K`` or ``:vw=auto``):
+    # a fixed virtual-worker count decouples the trajectory from the
+    # physical shape — every resize/reshape/preemption the scheduler
+    # applies leaves the tenant's loss trajectory bitwise-identical to the
+    # fixed-shape run. 0 disables (dynamic pipeline); "auto" sizes it to
+    # the max feasible dp of the launch device set — preemptible tenants
+    # should pin an explicit K instead (a re-admission may launch on a
+    # different pool, and the checkpoint restore enforces the same K).
+    virtual_workers: int | str = 0
 
     def __post_init__(self):
         if self.model_parallel < 1:
@@ -91,6 +103,20 @@ class JobSpec:
         if self.requested_p < 1:
             raise ValueError(f"{self.name}: requested_p must be >= 1, "
                              f"got {self.requested_p}")
+        # reject an infeasible vw at SUBMISSION, not at launch deep inside
+        # the executor's scheduling round
+        vw = self.virtual_workers
+        if isinstance(vw, str):
+            if vw != "auto":
+                raise ValueError(f"{self.name}: virtual_workers must be an "
+                                 f"int or 'auto', got {vw!r}")
+        elif vw < 0:
+            raise ValueError(f"{self.name}: virtual_workers must be >= 0, "
+                             f"got {vw}")
+        elif vw and self.global_batch % vw:
+            raise ValueError(f"{self.name}: global batch "
+                             f"{self.global_batch} not divisible by "
+                             f"virtual_workers={vw}")
 
 
 class ClusterJob:
@@ -220,10 +246,15 @@ class ClusterJob:
 
     def feasible_p(self, target: int) -> int:
         """Largest group count <= target the job can actually run at (the
-        global batch must divide across the replicas). 0 means full
-        preemption: the executor checkpoint-stops the job and re-admits it
-        later."""
-        return feasible_parallelism(self.spec.global_batch, target)
+        global batch must divide across the replicas; a deterministic
+        tenant's p must also divide its virtual-worker count). 0 means
+        full preemption: the executor checkpoint-stops the job and
+        re-admits it later."""
+        nv = self.spec.virtual_workers
+        if self.trainer is not None:
+            nv = getattr(self.trainer, "n_virtual", 0)
+        return feasible_parallelism(self.spec.global_batch, target,
+                                    nv if isinstance(nv, int) else 0)
 
     def on_step(self, metrics: dict, now: float):
         if self.start_time is None:

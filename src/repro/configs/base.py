@@ -72,6 +72,10 @@ class ArchConfig:
     norm_eps: float = 1e-5
     tie_embeddings: bool = False
     max_seq: int = 131072
+    # input (embedding) dropout rate; applied only when the train step
+    # threads an RNG into loss_fn (per-virtual-worker keys, see
+    # training/step.py) so stochastic regularization stays reproducible
+    dropout: float = 0.0
     # runtime knobs
     param_dtype: str = "bfloat16"
     compute_dtype: str = "bfloat16"

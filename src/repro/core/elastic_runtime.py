@@ -30,7 +30,7 @@ from repro.core.coordination import CoordinationStore
 from repro.core.election import LeaderElection
 from repro.core.membership import Membership, StragglerDetector
 from repro.core.scaling import Busy, Phase, ScalingController, ScalingRecord
-from repro.data.pipeline import DynamicDataPipeline
+from repro.data.pipeline import DynamicDataPipeline, VirtualWorkerPipeline
 from repro.data.synthetic import SyntheticTokenDataset
 from repro.data.worker import WorkerDataIterator
 from repro.launch.mesh import make_mesh
@@ -94,6 +94,15 @@ class ElasticTrainer:
     executor's DiskCheckpointer drives separately so the save can run in
     the background), and ``resume_from_checkpoint`` restores into a fresh
     trainer — the trainer itself always runs at p >= 1.
+
+    ``virtual_workers=K`` (or ``"auto"``) turns on DETERMINISTIC
+    elasticity: data, RNG and reduction order are all keyed to K fixed
+    virtual workers instead of the physical slices, so any elastic
+    trajectory — resizes, reshapes, checkpoint round trips — is
+    bitwise-identical to the fixed-shape run. Every dp the job runs at
+    must divide K (resize targets that don't are rejected with the same
+    ValueError contract as batch divisibility). See docs/architecture.md,
+    "Deterministic elasticity".
     """
 
     def __init__(self, cfg, *, global_batch: int, seq_len: int,
@@ -104,6 +113,7 @@ class ElasticTrainer:
                  job_handle: str = "job0",
                  store: CoordinationStore | None = None, seed: int = 0,
                  devices=None, use_aot: bool = True,
+                 virtual_workers: int | str | None = None,
                  time_allowance_s: float = TIME_ALLOWANCE_S):
         self.cfg = cfg
         self.global_batch = global_batch
@@ -114,16 +124,31 @@ class ElasticTrainer:
         self.job_handle = job_handle
         self.store = store or CoordinationStore()
         self.use_aot = use_aot
+        self.seed = seed
         # paper default 500 ms; cluster executor shrinks it for smoke-scale
         # jobs whose whole lifetime is a few seconds
         self.time_allowance_s = time_allowance_s
 
-        # data substrate (leader-side pipeline + per-slice iterators)
+        # deterministic elasticity (EasyScale-style virtual workers):
+        # n_virtual fixes the logical parallelism for the job's lifetime;
+        # every feasible dp must divide it. "auto" = the largest feasible
+        # dp on the job's device pool, so every power-of-two shrink from
+        # a full scale-out stays admissible.
+        self.n_virtual = self._resolve_virtual(virtual_workers,
+                                               init_parallelism)
+
+        # data substrate: leader-side pipeline (+ per-slice iterators in
+        # dynamic mode; virtual mode assembles batches leader-side from
+        # per-virtual-worker cursors, so slices carry no data state)
         self.dataset = dataset or SyntheticTokenDataset(
             n_samples, seq_len, cfg.vocab, seed=seed,
             d_model=cfg.d_model, embeds=(cfg.frontend == "embeds"))
-        self.pipeline = DynamicDataPipeline(self.dataset.n_samples,
-                                            d_partitions, seed=seed)
+        if self.n_virtual:
+            self.pipeline = VirtualWorkerPipeline(
+                self.dataset.n_samples, self.n_virtual, seed=seed)
+        else:
+            self.pipeline = DynamicDataPipeline(self.dataset.n_samples,
+                                                d_partitions, seed=seed)
 
         # control plane
         self.membership = Membership()
@@ -161,22 +186,49 @@ class ElasticTrainer:
         self.on_devices_released: Callable | None = None
 
     # ------------------------------------------------------------- workers
+    def _resolve_virtual(self, virtual_workers, init_p: int) -> int:
+        """0 = dynamic-pipeline mode. "auto" picks the max feasible dp on
+        the job's device pool; an int is validated against the batch and
+        launch shape (every dp the job ever runs at must divide it —
+        later resize targets are checked in ``_request``)."""
+        if not virtual_workers:
+            return 0
+        if virtual_workers == "auto":
+            from repro.cluster.job import feasible_parallelism
+            nv = feasible_parallelism(
+                self.global_batch,
+                max(1, len(self.devices) // self.model_parallel))
+        else:
+            nv = int(virtual_workers)
+        if nv < 1:
+            raise ValueError(f"virtual_workers must be >= 1, got {nv}")
+        if self.global_batch % nv:
+            raise ValueError(f"global batch {self.global_batch} not "
+                             f"divisible by virtual_workers={nv}")
+        if nv % init_p:
+            raise ValueError(f"init parallelism {init_p} must divide "
+                             f"virtual_workers={nv}")
+        return nv
+
     def _add_worker(self) -> str:
         wid = f"w{self._worker_seq}"
         self._worker_seq += 1
         self.worker_ids.append(wid)
-        self.iters[wid] = WorkerDataIterator(wid, self.pipeline, self.dataset,
-                                             prefetch=False)
+        if not self.n_virtual:
+            self.iters[wid] = WorkerDataIterator(
+                wid, self.pipeline, self.dataset, prefetch=False)
         self.membership.register(wid, len(self.worker_ids) - 1)
         return wid
 
     def _remove_worker(self, wid: str, *, dead: bool = False):
-        if dead:
+        it = self.iters.pop(wid, None)
+        if it is None:              # virtual mode: no per-slice data state
+            self.pipeline.release(wid, dead=dead)
+        elif dead:
             self.pipeline.release(wid, dead=True)
         else:
-            self.iters[wid].graceful_exit()     # return data remainder
+            it.graceful_exit()      # return data remainder
         self.worker_ids.remove(wid)
-        del self.iters[wid]
         self.membership.remove(wid)
         self.straggler_detector.reset(wid)
 
@@ -209,7 +261,13 @@ class ElasticTrainer:
         specs = input_specs(self.cfg, shape)
         specs.pop("cache", None)
         b_sh = batch_sharding(self.cfg, mesh, specs)
-        fn = make_train_step(self.cfg, self.optimizer)
+        # virtual mode builds the deterministic shard_map step for THIS
+        # mesh shape; the step math (per-vw slices, tree reduction, per-vw
+        # RNG) is a function of n_virtual alone, so every shape computes
+        # bitwise-identical updates
+        fn = make_train_step(self.cfg, self.optimizer,
+                             n_virtual=self.n_virtual, mesh=mesh,
+                             global_batch=self.global_batch, seed=self.seed)
         if self.use_aot:
             with mesh:
                 compiled = jax.jit(
@@ -236,7 +294,25 @@ class ElasticTrainer:
         of an epoch may come up short — it is padded by cycling the drawn
         samples (recorded sample_ids stay un-padded, preserving the
         exactly-once accounting; only the SGD step sees a few duplicates at
-        the boundary, the paper-accepted consistency semantics)."""
+        the boundary, the paper-accepted consistency semantics).
+
+        Virtual mode instead assembles the batch leader-side from the
+        per-virtual-worker cursors, in fixed virtual order: identical
+        sample sequence at every dp, always full (per-vw epoch wrap), no
+        padding — the data half of the bitwise-determinism contract."""
+        if self.n_virtual:
+            if self.pipeline.exhausted:
+                return None
+            per_vw = self.global_batch // self.n_virtual
+            ids = np.concatenate([
+                self.pipeline.draw_block(w, self.p, per_vw)
+                for w in range(self.p)])
+            batch = self.dataset.read_ids(ids)
+            self._last_sample_ids = batch.pop("sample_ids")
+            if self.cfg.frontend == "embeds":
+                batch = {"embeds": batch["embeds"],
+                         "labels": batch["labels"]}
+            return batch
         per = self.global_batch // self.p
         parts = []
         for wid in self.worker_ids:
@@ -343,6 +419,11 @@ class ElasticTrainer:
         if self.global_batch % target_p:
             raise ValueError(f"global batch {self.global_batch} not "
                              f"divisible by p={target_p}")
+        if self.n_virtual and self.n_virtual % target_p:
+            raise ValueError(
+                f"p={target_p} must divide virtual_workers="
+                f"{self.n_virtual} (virtual blocks stay contiguous and "
+                f"equal-sized at every shape)")
         plan = self.controller.admit(op, self.p, target_p)  # raises Busy
         plan.record.from_mp = self.model_parallel
         plan.record.to_mp = target_mp

@@ -50,6 +50,8 @@ def checkpoint_save(trainer, checkpoint_dir: str) -> None:
         extra={"samples_seen": trainer.samples_seen, "p": trainer.p,
                "mp": trainer.model_parallel,
                "job_handle": trainer.job_handle,
+               "virtual_workers": getattr(trainer, "n_virtual", 0),
+               "seed": getattr(trainer, "seed", 0),
                "state_spec": StateSpec.for_trainer(trainer).to_json()})
 
 
@@ -111,6 +113,17 @@ def resume_from_checkpoint(trainer, checkpoint_dir: str) -> dict:
         trainer.state = jax.device_put(restored,
                                        trainer.exec.state_shardings)
     jax.block_until_ready(jax.tree.leaves(trainer.state)[0])
+    # deterministic elasticity: the virtual-worker count is part of the
+    # trajectory's identity — a restore must keep it (the pipeline's own
+    # load_state_dict then validates cursors against block layout)
+    saved_nv = int((meta.get("extra") or {}).get("virtual_workers", 0) or 0)
+    trainer_nv = int(getattr(trainer, "n_virtual", 0) or 0)
+    if saved_nv != trainer_nv:
+        raise ValueError(
+            f"checkpoint was written with virtual_workers={saved_nv} but "
+            f"the target trainer runs virtual_workers={trainer_nv}; "
+            f"bitwise trajectory preservation requires the same fixed "
+            f"virtual-worker count at every shape")
     trainer.pipeline.load_state_dict(meta["pipeline"])
     for it in trainer.iters.values():
         it.assignment = None
@@ -139,6 +152,9 @@ def stop_resume_rescale(trainer, target_p: int,
         raise ValueError(f"shape ({target_p}, {target_mp}) needs "
                          f"{target_p * target_mp} devices, trainer owns "
                          f"{len(trainer.devices)}")
+    nv = getattr(trainer, "n_virtual", 0)
+    if nv and nv % target_p:
+        raise ValueError(f"p={target_p} must divide virtual_workers={nv}")
     rec = ScalingRecord("stop_resume", trainer.p, target_p,
                         t_request=time.monotonic(),
                         from_mp=trainer.model_parallel, to_mp=target_mp)

@@ -22,7 +22,14 @@ class SyntheticTokenDataset:
     def read(self, start: int, count: int) -> dict:
         """Sequential read of samples [start, start+count) — the worker-side
         analogue of an HDFS ranged read of one partition chunk."""
-        idx = np.arange(start, start + count, dtype=np.uint64)
+        return self.read_ids(np.arange(start, start + count, dtype=np.int64))
+
+    def read_ids(self, ids) -> dict:
+        """Random-access read of an explicit sample-id array (a gather).
+        The virtual-worker pipeline draws per-virtual-worker PERMUTED ids,
+        so its reads are scattered rather than ranged; sample ``i`` is the
+        same fixed function of (seed, i) on either path."""
+        idx = np.asarray(ids, dtype=np.uint64)
         pos = np.arange(self.seq_len + 1, dtype=np.uint64)
         # splitmix-style hash of (seed, sample, position) -> token
         h = (idx[:, None] * np.uint64(0x9E3779B97F4A7C15)

@@ -2,6 +2,14 @@
 dynamic pipeline on demand, reads samples (synthetic stand-in for an HDFS
 ranged read), and keeps a double-buffer prefetcher (EDL §4.4's ping-pong
 buffer) so the accelerator never waits on I/O.
+
+One iterator per PHYSICAL worker (data-parallel slice); the partitions it
+streams through are the pipeline's logical read chunks, not a per-worker
+static shard — the whole point of §4.3 is that the worker:partition ratio
+is dynamic. The deterministic virtual-worker pipeline
+(data.pipeline.VirtualWorkerPipeline) bypasses this iterator entirely:
+there the leader assembles batches directly from per-virtual-worker
+cursors, so physical workers hold no data-progress state at all.
 """
 from __future__ import annotations
 
@@ -14,9 +22,9 @@ from repro.data.pipeline import DynamicDataPipeline, EpochExhausted
 
 
 class WorkerDataIterator:
-    """One per (logical) worker. ``draw(n)`` returns n samples, advancing the
+    """One per physical worker. ``draw(n)`` returns n samples, advancing the
     leader-side progress offsets; on partition exhaustion it transparently
-    requests the next assignment."""
+    requests the next assignment from the dynamic pipeline."""
 
     def __init__(self, worker_id: str, pipeline: DynamicDataPipeline,
                  dataset, *, prefetch: bool = True):

@@ -43,7 +43,8 @@ device-conservation verdict as JSON.
   PYTHONPATH=src python -m repro.launch.cluster --devices 4 \
       --workload "trace=philly seed=0 jobs=6 steps=4:10"
 
-Job grammar: ``name=profile:requested_p:total_steps[:mp=M|mp=auto]@arrival``
+Job grammar:
+``name=profile:requested_p:total_steps[:mp=M|mp=auto][:vw=K]@arrival``
 where ``profile`` names an analytic scaling profile
 (sched.throughput.PROFILES — the ThroughputModel's prior), ``arrival`` is
 in scheduling rounds, and the optional ``mp=M`` field makes the tenant
@@ -77,13 +78,16 @@ import time
 
 def parse_jobs(text: str, *, batch: int, seq: int, n_samples: int,
                d_partitions: int, default_mp: int = 1):
-    """``name=profile:requested_p:total_steps[:mp=M|mp=auto]@arrival`` —
-    fields after the first three are ``key=value`` (extensible); ``mp``
+    """``name=profile:requested_p:total_steps[:mp=M|mp=auto][:vw=K]@arrival``
+    — fields after the first three are ``key=value`` (extensible); ``mp``
     sets the tenant's model-parallel degree (devices per allocation
     group). ``mp=auto`` leaves the degree to the scheduler: the tenant
     launches data-parallel and reshape-aware policies may re-target its
-    degree live (the RESHAPE verb). ``default_mp`` applies to jobs
-    without an explicit ``mp=`` (the bench's --model-parallel knob)."""
+    degree live (the RESHAPE verb). ``vw=K`` (or ``vw=auto``) opts the
+    tenant into deterministic elasticity: K fixed virtual workers make
+    every resize the scheduler applies bitwise trajectory-preserving
+    (every dp must divide K). ``default_mp`` applies to jobs without an
+    explicit ``mp=`` (the bench's --model-parallel knob)."""
     from repro.cluster.job import JobSpec
     specs = []
     for i, item in enumerate(text.split(",")):
@@ -91,22 +95,25 @@ def parse_jobs(text: str, *, batch: int, seq: int, n_samples: int,
         body, _, arrival = rest.partition("@")
         profile, req_p, steps, *extras = body.split(":")
         mp, mp_auto = default_mp, False
+        vw: int | str = 0
         for extra in extras:
             key, eq, val = extra.partition("=")
             if key == "mp" and eq and val == "auto":
                 mp, mp_auto = 1, True
             elif key == "mp" and eq:
                 mp = int(val)
+            elif key == "vw" and eq:
+                vw = val if val == "auto" else int(val)
             else:
                 raise ValueError(
                     f"job {name!r}: unknown spec field {extra!r} "
-                    f"(supported: mp=M, mp=auto)")
+                    f"(supported: mp=M, mp=auto, vw=K, vw=auto)")
         specs.append(JobSpec(
             name=name.strip(), profile=profile, requested_p=int(req_p),
             total_steps=int(steps), arrival=float(arrival or 0.0),
             model_parallel=mp, mp_auto=mp_auto, global_batch=batch,
             seq_len=seq, n_samples=n_samples, d_partitions=d_partitions,
-            seed=i))
+            seed=i, virtual_workers=vw))
     return specs
 
 

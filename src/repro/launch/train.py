@@ -28,7 +28,15 @@ records + exactly-once data accounting as JSON.
       --schedule out:2@30,in:2@120
 
 Schedule grammar: ``<op>:<n>@<step>`` with op in {out, in, migrate,
-stop_resume_out, stop_resume_in, straggler, fail}.
+stop_resume_out, stop_resume_in, stop_resume_mp, straggler, fail}.
+``stop_resume_mp:M`` checkpoint-stops the job and resumes it reparallelized
+at model-parallel degree M (device footprint held constant) — with
+``--virtual-workers`` on, the restored run continues the bitwise-exact
+trajectory on the new (dp, mp).
+
+``--virtual-workers K`` (or ``auto``) turns on deterministic elasticity:
+the loss trajectory (reported in the JSON ``losses`` field) is
+bitwise-identical across every parallelism and every elastic schedule.
 """
 import json
 import time
@@ -50,7 +58,14 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--json", action="store_true", help="machine output")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--virtual-workers", default=None, metavar="K",
+                    help="fixed virtual-worker count (int or 'auto') — "
+                         "deterministic elasticity: bitwise-identical "
+                         "trajectories at every (dp, mp)")
     args = ap.parse_args(argv)
+    vw = args.virtual_workers
+    if vw is not None and vw != "auto":
+        vw = int(vw)
 
     import jax  # noqa: E402  (after XLA_FLAGS)
     from repro.configs import get_config
@@ -69,6 +84,12 @@ def main(argv=None):
             stop_resume_rescale(trainer, trainer.p + n)
         elif opn == "stop_resume_in":
             stop_resume_rescale(trainer, trainer.p - n)
+        elif opn == "stop_resume_mp":
+            # checkpoint-based reparallelization onto mp=n at a constant
+            # device footprint: (p, mp) -> (p*mp/n, n)
+            stop_resume_rescale(
+                trainer, max(1, trainer.p * trainer.model_parallel // n),
+                target_mp=n)
         elif opn == "straggler":
             trainer.injected_delay[trainer.worker_ids[-1]] = 0.05
         elif opn == "fail":
@@ -80,7 +101,8 @@ def main(argv=None):
         cfg, global_batch=args.batch, seq_len=args.seq,
         init_parallelism=args.init_p, model_parallel=args.model_parallel,
         optimizer=adamw(args.lr), n_samples=args.n_samples,
-        d_partitions=args.d_partitions, seed=args.seed)
+        d_partitions=args.d_partitions, seed=args.seed,
+        virtual_workers=vw)
 
     schedule: dict[int, list[tuple[str, int]]] = {}
     if args.schedule:
@@ -136,6 +158,11 @@ def main(argv=None):
         "wall_s": round(wall, 2),
         "final_loss": trainer.metrics_log[-1]["loss"],
         "first_loss": trainer.metrics_log[0]["loss"],
+        # the full per-step trajectory: with --virtual-workers this is the
+        # bitwise-determinism contract surface (exact-equality tests
+        # compare it across parallelisms and elastic schedules)
+        "losses": [m["loss"] for m in trainer.metrics_log],
+        "virtual_workers": trainer.n_virtual,
         "throughput": trainer.throughput(),
         "scaling_events": [r.summary() for r in trainer.controller.history],
         "samples_seen": int(trainer.samples_seen),

@@ -164,10 +164,17 @@ def embed_inputs(cfg, params, batch):
     return apply_embed(params["embed"], batch["tokens"], cd)
 
 
-def forward(cfg, params, batch, *, mode: str, cache=None, use_pallas=False):
+def forward(cfg, params, batch, *, mode: str, cache=None, use_pallas=False,
+            rng=None):
     """mode: 'train' -> (hidden, aux); 'prefill' -> (last-position logits,
-    aux); 'decode' -> (logits [B,1,V], new_cache)."""
+    aux); 'decode' -> (logits [B,1,V], new_cache). ``rng`` keys the input
+    dropout (train only, ``cfg.dropout > 0``); with ``rng=None`` the
+    forward is fully deterministic."""
     x = embed_inputs(cfg, params, batch)
+    if mode == "train" and rng is not None and cfg.dropout > 0.0:
+        keep = 1.0 - cfg.dropout
+        mask = jax.random.bernoulli(rng, keep, x.shape)
+        x = jnp.where(mask, x / keep, jnp.zeros((), x.dtype)).astype(x.dtype)
     Bsz, L, _ = x.shape
     x = constrain(x, ("batch", None, None))
     if mode == "decode":
@@ -219,9 +226,9 @@ def chunked_xent(cfg, params, hidden, labels):
     return total / (Bsz * L)
 
 
-def loss_fn(cfg, params, batch, *, use_pallas=False):
+def loss_fn(cfg, params, batch, *, use_pallas=False, rng=None):
     hidden, aux = forward(cfg, params, batch, mode="train",
-                          use_pallas=use_pallas)
+                          use_pallas=use_pallas, rng=rng)
     labels = batch["labels"]
     loss = chunked_xent(cfg, params, hidden, labels)
     aux_w = cfg.moe.aux_loss_weight if cfg.moe else 0.0

@@ -102,10 +102,18 @@ class TensorLayout:
 
 @dataclasses.dataclass(frozen=True)
 class StateSpec:
-    """The whole collection at one parallelization config."""
+    """The whole collection at one parallelization config.
+
+    ``virtual`` is the optional deterministic-elasticity payload: the
+    virtual-worker count, sampling seed, and the pipeline's cursor/epoch
+    state (``VirtualWorkerPipeline.state_dict``). Like the tensor layouts
+    it is device-free, so carrying it through a reshape or a checkpoint
+    preserves the exact training trajectory onto ANY target (dp, mp).
+    ``None`` for jobs running the dynamic (non-deterministic) pipeline."""
     dp: int
     mp: int
     tensors: tuple[TensorLayout, ...]
+    virtual: dict | None = None
 
     @property
     def n_devices(self) -> int:
@@ -143,10 +151,18 @@ class StateSpec:
 
     @classmethod
     def for_trainer(cls, trainer) -> "StateSpec":
-        """The live trainer's current collection layout."""
-        return cls.from_shardings(trainer.p, trainer.model_parallel,
+        """The live trainer's current collection layout (+ the
+        virtual-worker payload when the trainer runs deterministic
+        elasticity)."""
+        spec = cls.from_shardings(trainer.p, trainer.model_parallel,
                                   trainer.exec.state_shardings,
                                   trainer.state)
+        if getattr(trainer, "n_virtual", 0):
+            spec = dataclasses.replace(
+                spec, virtual={"n_virtual": trainer.n_virtual,
+                               "seed": trainer.seed,
+                               "pipeline": trainer.pipeline.state_dict()})
+        return spec
 
     @classmethod
     def for_config(cls, cfg, optimizer, dp: int, mp: int) -> "StateSpec":
@@ -180,12 +196,16 @@ class StateSpec:
 
     # -------------------------------------------------------- serialization
     def to_json(self) -> dict:
-        return {"dp": self.dp, "mp": self.mp,
-                "tensors": [[t.path, list(t.shape), list(t.axes)]
-                            for t in self.tensors]}
+        out = {"dp": self.dp, "mp": self.mp,
+               "tensors": [[t.path, list(t.shape), list(t.axes)]
+                           for t in self.tensors]}
+        if self.virtual is not None:
+            out["virtual"] = self.virtual
+        return out
 
     @classmethod
     def from_json(cls, obj: dict) -> "StateSpec":
         return cls(int(obj["dp"]), int(obj["mp"]), tuple(
             TensorLayout(p, tuple(s), tuple(a))
-            for p, s, a in obj["tensors"]))
+            for p, s, a in obj["tensors"]),
+            virtual=obj.get("virtual"))

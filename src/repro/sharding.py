@@ -11,7 +11,9 @@ the dry-run honest).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import threading
 from typing import Any, Mapping, Sequence
 
 import jax
@@ -90,9 +92,33 @@ def tree_shardings(axes_tree: Any, shape_tree: Any, mesh: Mesh,
                             isinstance(e, (str, type(None))) for e in x))
 
 
+_TLS = threading.local()
+
+
+@contextlib.contextmanager
+def manual_region():
+    """Suspend ``constrain`` for the enclosed trace.
+
+    Inside a full-manual ``shard_map`` body every value is a PER-DEVICE
+    block — mesh-axis sharding constraints are meaningless there (and XLA
+    rejects them). The deterministic virtual-worker train step traces the
+    model's ``loss_fn`` inside such a body, so the model code's logical-axis
+    annotations must become no-ops without the model knowing; thread-local
+    so concurrent tracers (background AOT compiles) are unaffected."""
+    prev = getattr(_TLS, "manual", False)
+    _TLS.manual = True
+    try:
+        yield
+    finally:
+        _TLS.manual = prev
+
+
 def constrain(x: jax.Array, logical_axes: Sequence[str | None],
               rules: Mapping[str, tuple[str, ...]] | None = None) -> jax.Array:
-    """with_sharding_constraint from logical axes, no-op outside a mesh."""
+    """with_sharding_constraint from logical axes; no-op outside a mesh or
+    inside a ``manual_region`` (per-device shard_map trace)."""
+    if getattr(_TLS, "manual", False):
+        return x
     mesh = get_abstract_mesh_or_none()
     if mesh is None:
         return x

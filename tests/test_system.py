@@ -94,15 +94,45 @@ def test_failure_approximate_recovery():
 
 @pytest.mark.slow
 def test_grad_invariance_across_parallelism():
-    """The batch-constancy invariant: the global batch SIZE is constant at
-    every parallelism, so p=1 and p=4 follow the same loss trajectory in
-    distribution. The sample COMPOSITION differs (each worker draws from
-    its own partition), so the comparison is between same-size batches of
-    the same synthetic distribution — not bitwise-identical data — and the
-    tolerance covers that sampling noise over 10 steps plus fp32 reduction
-    order, not a semantic divergence."""
-    a = run_driver("--init-p", "1", steps=10, batch=8)
-    b = run_driver("--init-p", "4", steps=10, batch=8)
+    """Virtual-worker determinism: with a fixed virtual-worker count the
+    batch composition, per-vw RNG and reduction order are all functions of
+    the virtual shape alone, so p=1 and p=4 produce bitwise-identical loss
+    trajectories — exact equality, no tolerance."""
+    a = run_driver("--init-p", "1", "--virtual-workers", "8",
+                   steps=10, batch=8)
+    b = run_driver("--init-p", "4", "--virtual-workers", "8",
+                   steps=10, batch=8)
     assert a["final_loss"] < a["first_loss"]
-    assert b["final_loss"] < b["first_loss"]
-    assert abs(a["final_loss"] - b["final_loss"]) < 1e-1, (a, b)
+    assert len(a["losses"]) == len(b["losses"]) == 10
+    assert a["losses"] == b["losses"], (a["losses"], b["losses"])
+
+
+@pytest.mark.slow
+def test_elastic_schedule_matches_static_bitwise():
+    """A run that resizes 1 -> 4 -> 2 mid-training follows the exact same
+    loss trajectory as the static p=1 run — elasticity becomes trajectory-
+    invisible under virtual workers."""
+    static = run_driver("--init-p", "1", "--virtual-workers", "8",
+                        steps=10, batch=8)
+    elastic = run_driver("--init-p", "1", "--virtual-workers", "8",
+                         "--schedule", "out:3@3,in:2@6", steps=10, batch=8)
+    assert elastic["scaling_events"], elastic
+    assert static["losses"] == elastic["losses"][:len(static["losses"])], \
+        (static["losses"], elastic["losses"])
+
+
+@pytest.mark.slow
+def test_checkpoint_restore_cross_shape_bitwise():
+    """Checkpoint-stop at (4, 1), restore onto (2, 2): the virtual-worker
+    RNG + cursor state rides the checkpoint (StateSpec.virtual), so the
+    resumed run continues the exact static trajectory on a different
+    (dp, mp)."""
+    static = run_driver("--init-p", "1", "--virtual-workers", "8",
+                        steps=10, batch=8)
+    reshaped = run_driver("--init-p", "4", "--virtual-workers", "8",
+                          "--schedule", "stop_resume_mp:2@5",
+                          steps=10, batch=8)
+    assert any(e["op"] == "stop_resume"
+               for e in reshaped["scaling_events"]), reshaped
+    assert static["losses"] == reshaped["losses"][:len(static["losses"])], \
+        (static["losses"], reshaped["losses"])

@@ -1,0 +1,204 @@
+"""Virtual-worker determinism, the fast (single-device) half:
+
+  * virtual -> physical mapping: every feasible dp covers all virtual
+    workers exactly once in contiguous equal blocks (hypothesis when
+    available, deterministic sweep otherwise);
+  * VirtualWorkerPipeline: the global sample sequence is identical at
+    every dp, resizing mid-stream loses no cursor, and ``state_dict``
+    round-trips the sampling state exactly;
+  * the fixed tree reduction's pairing order is a function of the
+    virtual count alone;
+  * StateSpec carries the virtual payload through JSON.
+
+The bitwise loss-trajectory equality these properties buy is asserted
+end-to-end in tests/test_system.py (slow, multi-device subprocesses).
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+from repro.data.partition import virtual_block, virtual_blocks
+from repro.data.pipeline import VirtualWorkerPipeline
+
+
+def _divisors(n):
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+# ------------------------------------------------- mapping properties
+def _check_mapping(n_virtual):
+    for dp in _divisors(n_virtual):
+        blocks = virtual_blocks(dp, n_virtual)
+        # equal-sized contiguous blocks...
+        assert all(len(b) == n_virtual // dp for b in blocks)
+        assert all(b.step == 1 for b in blocks)
+        # ...whose concatenation in worker order is exactly the fixed
+        # virtual order (covers every vw exactly once)
+        flat = [vw for b in blocks for vw in b]
+        assert flat == list(range(n_virtual))
+
+
+def test_mapping_covers_exactly_once_fixed_cases():
+    for nv in (1, 2, 6, 8, 12, 16, 24):
+        _check_mapping(nv)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=50, deadline=None)
+    @given(nv=st.integers(1, 128))
+    def test_mapping_covers_exactly_once(nv):
+        _check_mapping(nv)
+else:
+    def test_mapping_covers_exactly_once():
+        pytest.importorskip("hypothesis")
+
+
+def test_mapping_rejects_infeasible_dp():
+    with pytest.raises(ValueError):
+        virtual_block(0, 3, 8)      # 3 does not divide 8
+    with pytest.raises(ValueError):
+        virtual_block(2, 2, 8)      # worker index out of range
+    with pytest.raises(ValueError):
+        virtual_block(0, 9, 8)      # dp > n_virtual
+
+
+# ------------------------------------------- pipeline shape invariance
+def _global_sequence(pipe, dp, per_vw, steps):
+    """``steps`` global batches assembled the way the trainer does it:
+    per-physical-worker blocks concatenated in worker order."""
+    out = []
+    for _ in range(steps):
+        out.append(np.concatenate(
+            [pipe.draw_block(w, dp, per_vw) for w in range(dp)]))
+    return np.stack(out)
+
+
+def _check_sequence_invariance(n_samples, nv, per_vw, steps, seed):
+    ref = _global_sequence(
+        VirtualWorkerPipeline(n_samples, nv, seed=seed), 1, per_vw, steps)
+    for dp in _divisors(nv)[1:]:
+        got = _global_sequence(
+            VirtualWorkerPipeline(n_samples, nv, seed=seed), dp, per_vw,
+            steps)
+        assert np.array_equal(ref, got), (nv, dp)
+
+
+def test_sequence_invariant_across_dp_fixed_cases():
+    _check_sequence_invariance(64, 8, 1, 12, seed=0)
+    _check_sequence_invariance(96, 6, 2, 9, seed=3)
+    _check_sequence_invariance(33, 4, 3, 7, seed=1)   # uneven blocks, wraps
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(nv=st.integers(1, 12), per_vw=st.integers(1, 3),
+           steps=st.integers(1, 10), seed=st.integers(0, 1000),
+           slack=st.integers(0, 20))
+    def test_sequence_invariant_across_dp(nv, per_vw, steps, seed, slack):
+        _check_sequence_invariance(nv * 4 + slack, nv, per_vw, steps, seed)
+else:
+    def test_sequence_invariant_across_dp():
+        pytest.importorskip("hypothesis")
+
+
+def test_resize_midstream_loses_no_cursor():
+    """Scaling 1 -> 4 -> 2 between draws continues the exact sequence the
+    static run produces: cursors are per-virtual-worker, so remapping the
+    physical hosts is invisible to the sample stream."""
+    ref = _global_sequence(VirtualWorkerPipeline(64, 8, seed=7), 1, 2, 9)
+    pipe = VirtualWorkerPipeline(64, 8, seed=7)
+    got = [_global_sequence(pipe, 1, 2, 3),
+           _global_sequence(pipe, 4, 2, 3),
+           _global_sequence(pipe, 2, 2, 3)]
+    assert np.array_equal(ref, np.concatenate(got))
+
+
+def test_epoch_is_exactly_once_when_blocks_align():
+    """With equal blocks, one epoch's worth of draws serves every sample
+    exactly once (the deterministic analogue of the dynamic pipeline's
+    exactly-once property)."""
+    pipe = VirtualWorkerPipeline(64, 8, seed=2)
+    seq = _global_sequence(pipe, 2, 2, 4).ravel()     # 4 steps * 16 = 64
+    assert sorted(seq.tolist()) == list(range(64))
+    assert pipe.epoch == 1
+
+
+def test_state_dict_roundtrip_exact():
+    pipe = VirtualWorkerPipeline(48, 4, seed=5)
+    _global_sequence(pipe, 2, 3, 3)                   # advance mid-epoch
+    saved = pipe.state_dict()
+    rest = VirtualWorkerPipeline(48, 4, seed=0)
+    rest.load_state_dict(saved)
+    assert rest.state_dict() == saved
+    a = _global_sequence(pipe, 4, 3, 5)
+    b = _global_sequence(rest, 1, 3, 5)               # different dp too
+    assert np.array_equal(a, b)
+
+
+def test_state_dict_rejects_mismatched_shape():
+    pipe = VirtualWorkerPipeline(48, 4, seed=5)
+    other = VirtualWorkerPipeline(48, 6, seed=5)
+    with pytest.raises(ValueError):
+        other.load_state_dict(pipe.state_dict())
+
+
+# ------------------------------------------------------ tree reduction
+def test_tree_reduce_order_is_function_of_count_only():
+    import jax.numpy as jnp
+    from repro.training.step import _vw_tree_reduce
+    rng = np.random.default_rng(0)
+    for n in (1, 2, 3, 5, 8, 12):
+        x = rng.standard_normal(n).astype(np.float32)
+
+        def ref(v):
+            # the documented pairing: fold adjacent pairs, carry the tail
+            v = list(v)
+            while len(v) > 1:
+                half = len(v) // 2
+                v = [np.float32(v[2 * i] + v[2 * i + 1])
+                     for i in range(half)] + v[2 * half:]
+            return v[0]
+
+        got = np.asarray(_vw_tree_reduce(jnp.asarray(x)))
+        assert got == ref(x), n
+
+
+# ------------------------------------------------------ job submission
+def test_jobspec_rejects_infeasible_virtual_workers():
+    """An infeasible vw must fail at SUBMISSION with a clear message, not
+    crash the executor's scheduling round at launch time."""
+    from repro.cluster.job import JobSpec
+    with pytest.raises(ValueError, match="not divisible"):
+        JobSpec("a", requested_p=3, total_steps=20, global_batch=12,
+                virtual_workers=8)
+    with pytest.raises(ValueError, match="virtual_workers"):
+        JobSpec("a", requested_p=1, total_steps=20, virtual_workers=-1)
+    with pytest.raises(ValueError, match="virtual_workers"):
+        JobSpec("a", requested_p=1, total_steps=20, virtual_workers="all")
+    # feasible int and "auto" both pass
+    JobSpec("a", requested_p=3, total_steps=20, global_batch=12,
+            virtual_workers=6)
+    JobSpec("a", requested_p=3, total_steps=20, virtual_workers="auto")
+
+
+# ------------------------------------------------------ spec serialization
+def test_statespec_carries_virtual_payload():
+    from repro.reshape.spec import StateSpec, TensorLayout
+    t = TensorLayout("params/w", (4, 4), ("data", None))
+    payload = {"n_virtual": 8, "seed": 3,
+               "pipeline": {"virtual": True, "n_virtual": 8,
+                            "n_samples": 64, "seed": 3,
+                            "cursors": [1] * 8, "epochs": [0] * 8,
+                            "samples_served": 8}}
+    spec = StateSpec(2, 1, (t,), virtual=payload)
+    back = StateSpec.from_json(spec.to_json())
+    assert back.virtual == payload
+    assert back.tensors == spec.tensors
+    # dynamic-mode specs stay payload-free (and old checkpoints parse)
+    bare = StateSpec.from_json(StateSpec(2, 1, (t,)).to_json())
+    assert bare.virtual is None
