@@ -1,8 +1,8 @@
 # Tier-1 verification and common entry points (see ROADMAP.md).
 PY ?= python
 
-.PHONY: test test-fast docs-check cluster-demo bench-cluster bench-smoke \
-	bench-reshape bench-reshape-det
+.PHONY: test test-fast test-chaos docs-check cluster-demo bench-cluster \
+	bench-smoke bench-reshape bench-reshape-det bench-chaos
 
 # the tier-1 command: full suite, fail fast
 test:
@@ -11,6 +11,11 @@ test:
 # skip the multi-device subprocess integration tests (~seconds, not minutes)
 test-fast:
 	$(PY) -m pytest -x -q -m "not slow"
+
+# the fault-injection suite: seeded kill/revocation/crash schedules
+# against the executor (fast deterministic subset runs in tier-1 too)
+test-chaos:
+	$(PY) -m pytest -x -q -m "chaos and not slow"
 
 # docs cannot rot: compile every fenced python block in README.md/docs and
 # shape-check the quickstart the README points at
@@ -43,3 +48,14 @@ bench-smoke:
 	PYTHONPATH=src $(PY) benchmarks/cluster_bench.py \
 	  --policies throughput --throughput-model measured \
 	  --jobs "a=vgg19:2:6@0,b=resnet50:1:8@0" --max-rounds 150
+
+# goodput-under-churn: the same workload fault-free vs under a seeded
+# kill+revocation trace; recovery latencies and retained goodput land in
+# experiments/bench_chaos.json
+# the rounds= horizon keeps the seeded events inside the jobs' lifetime
+# (a fault scheduled after the last tenant finishes replays as a no-op)
+bench-chaos:
+	PYTHONPATH=src $(PY) benchmarks/cluster_bench.py \
+	  --policies throughput \
+	  --jobs "a=vgg19:2:16@0,b=resnet50:1:16@0" --max-rounds 200 \
+	  --faults "random:seed=0,kills=1,revokes=1,rounds=10"

@@ -141,6 +141,80 @@ def run_reshape_determinism_bench(args):
     return 0 if results["bitwise_identical"] else 1
 
 
+def run_faults_bench(args):
+    """Churn mode (``--faults``): replay a FaultPlan — a JSON revocation/
+    kill trace or an inline ``random:`` spec — against the live workload,
+    and run the SAME workload undisturbed as the baseline. Reports
+    recovery latency per fault and goodput-under-churn (total steps
+    completed per scheduling round, faulted vs baseline) and writes the
+    churn artifact to experiments/bench_chaos.json."""
+    from repro.chaos import FaultPlan
+    from repro.cluster import ClusterExecutor, make_policy
+    from repro.launch.cluster import parse_jobs
+
+    policy = args.policies.split(",")[0]
+    plan = FaultPlan.parse(args.faults)
+
+    def run(faults):
+        specs = parse_jobs(args.jobs, batch=12, seq=64, n_samples=1 << 10,
+                           d_partitions=16, default_mp=args.model_parallel)
+        ex = ClusterExecutor(specs, make_policy(policy), faults=faults,
+                             compile_cache=args.compile_cache)
+        t0 = time.monotonic()
+        stats = ex.run(max_rounds=args.max_rounds)
+        stats["wall_s"] = round(time.monotonic() - t0, 2)
+        ex.close()
+        return ex, stats
+
+    _, base = run(None)
+    ex, churn = run(plan)
+
+    def goodput(stats):
+        steps = sum(j["steps_done"] for j in stats["jobs"])
+        return steps / max(1, stats["rounds"])
+
+    recoveries = [e for e in churn["events"] if e["op"] == "recovered"]
+    results = {
+        "policy": policy,
+        "fault_plan": {"seed": plan.seed,
+                       "events": [e.to_dict() for e in plan.events]},
+        "baseline": {"goodput_steps_per_round": round(goodput(base), 3),
+                     "finished": base["finished"],
+                     "mean_jct": base["mean_jct"],
+                     "wall_s": base["wall_s"]},
+        "churn": {"goodput_steps_per_round": round(goodput(churn), 3),
+                  "finished": churn["finished"],
+                  "mean_jct": churn["mean_jct"],
+                  "wall_s": churn["wall_s"],
+                  "workers_killed": churn["workers_killed"],
+                  "devices_revoked": churn["devices_revoked"],
+                  "capacity_lost": churn["capacity_lost"],
+                  "pool": [churn["n_gpus_initial"], churn["n_gpus"]],
+                  "recoveries": [
+                      {"job": e["job"], "mode": e["mode"],
+                       "latency_s": e["latency_s"]} for e in recoveries],
+                  "mean_recovery_latency_s":
+                      churn["mean_recovery_latency_s"],
+                  "injector_log": ex.injector.log},
+        "conserved": churn["conserved"],
+        "goodput_retained": (round(goodput(churn) / goodput(base), 3)
+                             if goodput(base) else None),
+    }
+    lat = churn["mean_recovery_latency_s"]
+    emit("cluster_chaos_recovery",
+         (lat or 0.0) * 1e6,
+         f"goodput_retained={results['goodput_retained']}")
+    save("chaos", results)
+    print(f"churn replay ({len(plan.events)} faults, seed {plan.seed}): "
+          f"pool {churn['n_gpus_initial']} -> {churn['n_gpus']}, "
+          f"{churn['recoveries']} recoveries"
+          + (f" (mean latency {lat}s)" if lat is not None else "")
+          + f"; goodput retained {results['goodput_retained']} "
+          f"vs fault-free baseline — "
+          f"{'OK' if churn['conserved'] else 'LEAK'}")
+    return 0 if churn["conserved"] else 1
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--devices", type=int, default=4)
@@ -165,6 +239,12 @@ def main():
                          "reshape with virtual workers on must produce "
                          "ZERO loss-trajectory divergence vs the static "
                          "run (exit 1 on any divergence)")
+    ap.add_argument("--faults", default=None, metavar="PATH_OR_SPEC",
+                    help="churn mode: replay a FaultPlan (JSON trace file "
+                         "or 'random:seed=0,kills=1,...' spec) against "
+                         "the workload and report recovery latency + "
+                         "goodput-under-churn vs the fault-free baseline "
+                         "(writes experiments/bench_chaos.json)")
     ap.add_argument("--max-rounds", type=int, default=300)
     ap.add_argument("--compile-cache", default=None, metavar="DIR")
     args = ap.parse_args()
@@ -175,6 +255,8 @@ def main():
         return run_reshape_bench(args)
     if args.reshape_determinism:
         return run_reshape_determinism_bench(args)
+    if args.faults:
+        return run_faults_bench(args)
     from repro.cluster import ClusterExecutor, make_policy
     from repro.launch.cluster import parse_jobs
     from repro.sched.throughput import AnalyticModel, MeasuredModel

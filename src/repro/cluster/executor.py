@@ -202,7 +202,8 @@ class ClusterExecutor:
                  checkpointer=None, throughput_model=None,
                  profile_sweeps: bool = False, profile_steps: int = 3,
                  profile_ttl: float | None = None,
-                 compile_cache: str | None = None):
+                 compile_cache: str | None = None,
+                 faults=None, ckpt_max_retries: int = 3):
         if compile_cache:
             enable_compile_cache(compile_cache)
         if devices is None:
@@ -249,6 +250,29 @@ class ClusterExecutor:
         self._wants: dict[int, tuple[int, int]] = {}  # jid -> (groups, mp)
         self.round = 0
         self.events: list[dict] = []
+        # ------------------------------------------- fault tolerance state
+        # faults: a repro.chaos FaultPlan (or prebuilt FaultInjector)
+        # replayed against this run — kill/revocation/ckpt-crash events
+        self.injector = None
+        if faults is not None:
+            from repro.chaos import FaultInjector, FaultPlan
+            self.injector = (faults if isinstance(faults, FaultInjector)
+                             else FaultInjector(faults))
+        self.n_gpus_initial = self.n_gpus
+        # device ids condemned (dead worker's group / revoked capacity):
+        # still owned by their job until the recovery commits — they count
+        # toward conservation — but the moment they come home they leave
+        # the cluster instead of rejoining the free pool
+        self._condemned: set = set()
+        self._deferred_revocations: list[tuple[int | None, int]] = []
+        self._crash_next_ckpt = False       # armed by crash_checkpoint
+        self.ckpt_max_retries = ckpt_max_retries
+        self._ckpt_retries: dict[int, int] = {}
+        self.workers_killed = 0
+        self.devices_revoked = 0
+        self.capacity_lost = 0              # devices actually removed
+        self.ckpt_retry_total = 0
+        self.recovery_latencies: list[float] = []
 
     # the policy-view clock: scheduling rounds (see sched.base on units)
     @property
@@ -269,6 +293,43 @@ class ClusterExecutor:
         e.update(extra)
         self.events.append(e)
 
+    @staticmethod
+    def _dev_id(d):
+        return getattr(d, "id", d)
+
+    def _return_devices(self, freed: list) -> list:
+        """Route EVERY device hand-back to the pool through here: devices
+        condemned in the meantime (a dead worker's group, revoked
+        capacity) leave the cluster instead of rejoining ``free`` — dead
+        capacity must not fund the next grant. Shrinking ``n_gpus`` at
+        the same moment keeps the conservation assert exact and lets the
+        policies (which read ``view.n_gpus`` fresh every call) budget
+        against the smaller pool from the next reschedule on."""
+        gone = [d for d in freed if self._dev_id(d) in self._condemned]
+        kept = [d for d in freed if self._dev_id(d) not in self._condemned]
+        if gone:
+            ids = {self._dev_id(d) for d in gone}
+            self._condemned -= ids
+            self.devices = [d for d in self.devices
+                            if self._dev_id(d) not in ids]
+            self.n_gpus -= len(gone)
+            self.capacity_lost += len(gone)
+        self.free.extend(kept)
+        return kept
+
+    def _note_recovered(self, job: ClusterJob, mode: str):
+        """Close a fault's recovery-latency window: the first ownership
+        transfer after detection (stop-free release commit, or the
+        checkpoint landing) is when the cluster is whole again."""
+        t0 = getattr(job, "_fault_t0", None)
+        if t0 is None:
+            return
+        job._fault_t0 = None
+        lat = time.monotonic() - t0
+        self.recovery_latencies.append(lat)
+        self._event("recovered", job, job.alloc, job.alloc, loaned=0,
+                    mode=mode, latency_s=round(lat, 4))
+
     def _on_devices_released(self, trainer, freed: list):
         """ElasticTrainer hand-off hook: a release_devices scale-in (or a
         loan reclaim, or a footprint-shrinking RESHAPE) COMMITTED; the
@@ -278,7 +339,7 @@ class ClusterExecutor:
         surplus logs as ``reshape_release`` (the shape change itself was
         logged by the ``reshape`` event); inventing a scale_in transition
         in the NEW shape's units would corrupt the allocation trace."""
-        self.free.extend(freed)
+        self._return_devices(freed)
         job = self.jobs.get(getattr(trainer, "_cluster_jid", -1))
         if job is None:
             return
@@ -288,6 +349,7 @@ class ClusterExecutor:
         else:
             self._event("scale_in", job, job.alloc + len(freed) // job.mp,
                         job.alloc, devices=freed)
+        self._note_recovered(job, "stop_free")
 
     # ---------------------------------------------------------- admission
     def _admit_arrivals(self):
@@ -335,8 +397,38 @@ class ClusterExecutor:
         self.checkpointer.begin(job)
         self.checkpointing[job.jid] = job
         self._event("checkpoint", job, job.alloc, job.alloc)
-        if self.checkpointer.done(job):     # synchronous checkpointer
+        if self._ckpt_done(job):            # synchronous checkpointer
             self._finalize_preempt(job)
+
+    def _ckpt_done(self, job: ClusterJob) -> bool:
+        """``checkpointer.done`` with crash containment: a save that died
+        mid-flight (its thread raised — or the chaos injector armed a
+        crash) is logged and RETRIED — the trainer's state is still live
+        on its devices, so nothing is lost but time. The retry budget
+        bounds a persistently-failing save; exhausting it re-raises (the
+        pre-existing fail-loud behavior, now with the attempts on
+        record). Devices never move on the failure path, so conservation
+        is untouched."""
+        try:
+            ok = self.checkpointer.done(job)
+            err = None
+            if ok and self._crash_next_ckpt:
+                self._crash_next_ckpt = False
+                ok, err = False, RuntimeError(
+                    "injected fault: checkpoint save crashed mid-flight")
+        except BaseException as e:
+            ok, err = False, e
+        if err is None:
+            return ok
+        n = self._ckpt_retries.get(job.jid, 0) + 1
+        self._ckpt_retries[job.jid] = n
+        self.ckpt_retry_total += 1
+        self._event("checkpoint_failed", job, job.alloc, job.alloc,
+                    loaned=0, error=repr(err), attempt=n)
+        if n > self.ckpt_max_retries:
+            raise err
+        self.checkpointer.begin(job)
+        return False
 
     def _finalize_preempt(self, job: ClusterJob):
         """CHECKPOINTING -> PREEMPTED: the save landed. Tear the trainer
@@ -344,16 +436,18 @@ class ClusterExecutor:
         pending queue as re-admittable demand."""
         p = job.alloc
         freed = self.checkpointer.teardown(job)
-        self.free.extend(freed)
+        self._return_devices(freed)
+        self._ckpt_retries.pop(job.jid, None)
         job.park()
         del self.checkpointing[job.jid]
         self.pending.append(job)
         self._event("preempt", job, p, 0, devices=freed)
+        self._note_recovered(job, "checkpoint")
 
     def _collect_checkpoints(self):
         for jid in list(self.checkpointing):
             job = self.checkpointing[jid]
-            if self.checkpointer.done(job):
+            if self._ckpt_done(job):
                 self._finalize_preempt(job)
 
     def _await_checkpoint(self):
@@ -492,6 +586,159 @@ class ClusterExecutor:
             if cur + take >= target:
                 del self._wants[jid]
 
+    # ----------------------------------------------- failures & revocation
+    def _devices_of(self, trainer, wids) -> list:
+        """The device groups currently backing ``wids``: worker i of the
+        live mesh owns ``devices[i*mp:(i+1)*mp]`` (positional — both the
+        real trainer and the test fakes keep that correspondence)."""
+        mp = int(getattr(trainer, "model_parallel", 1) or 1)
+        out = []
+        for w in wids:
+            if w in trainer.worker_ids:
+                i = trainer.worker_ids.index(w)
+                out.extend(trainer.devices[i * mp:(i + 1) * mp])
+        return out
+
+    def _detect_failures(self):
+        """Leader-side dead-worker detection (EDL §4.1): a worker that
+        missed ``miss_threshold`` gradient-syncs while its job progressed
+        is dead. Runs every round after stepping; trainers without a
+        membership surface (plain fakes) are skipped."""
+        for job in list(self.running.values()):
+            trainer = job.trainer
+            membership = getattr(trainer, "membership", None)
+            if membership is None:
+                continue
+            dead = [w for w in membership.dead_workers(
+                        getattr(trainer, "step_idx", 0))
+                    if w in trainer.worker_ids]
+            if dead:
+                self._recover_dead(job, dead)
+
+    def _recover_dead(self, job: ClusterJob, dead: list[str]):
+        """Recovery state machine: detection -> condemn the dead groups ->
+        stop-free ``handle_failure`` scale-in (attained service intact,
+        training never stops) -> checkpoint-stop fallback when the
+        survivor shape is infeasible (``feasible_p`` = 0 after the batch /
+        n_virtual clamp) or the trainer cannot scale in. The dead devices
+        leave the cluster when they come home (``_return_devices``); a
+        mid-switch trainer defers one round and retries."""
+        trainer = job.trainer
+        # a worker stays in _dead_pending until the commit actually takes
+        # it out of worker_ids: the stop-free switch spans rounds, and
+        # detection keeps flagging the (still-present) corpse during prep
+        # — without this filter every prep round would re-count the same
+        # kill and emit duplicate worker_dead events
+        pending = {w for w in (getattr(job, "_dead_pending", None) or set())
+                   if w in trainer.worker_ids}
+        job._dead_pending = pending
+        new = [w for w in dead if w not in pending]
+        if new:
+            job._dead_pending = pending | set(new)
+            job._fault_t0 = time.monotonic()
+            self.workers_killed += len(new)
+            doomed = self._devices_of(trainer, new)
+            self._condemned.update(self._dev_id(d) for d in doomed)
+            self._event("worker_dead", job, job.alloc, job.alloc,
+                        devices=doomed, loaned=0, workers=list(new),
+                        steps_done=job.steps_done)
+        if trainer.controller.phase is not Phase.IDLE:
+            return                          # switch in flight; next round
+        dead = sorted(job._dead_pending)
+        target = job.feasible_p(job.alloc - len(dead))
+        if target >= 1 and hasattr(trainer, "handle_failure"):
+            try:
+                trainer.handle_failure(dead, release=True)
+            except Busy:
+                return                      # raced a new op; next round
+            except ValueError:
+                pass                        # infeasible: checkpoint-stop
+            else:
+                return      # pending clears itself once the commit lands
+        job._dead_pending = set()
+        self._preempt(job)                  # park with service preserved
+
+    def revoke_devices(self, n_devices: int = 1, *,
+                       jid: int | None = None) -> int:
+        """Revoke ``n_devices`` from the cluster WITHOUT warning (spot /
+        transient capacity reclaim, the flip side of Aryl-style loans).
+        Free devices vanish first; the remainder is reclaimed from
+        running jobs — stop-free ``release_devices`` when a feasible
+        survivor shape exists, checkpoint-preempt otherwise — with the
+        revoked devices condemned so they leave the pool at the commit.
+        ``jid`` pins the victim job (trace replay); by default the
+        largest running job donates. Returns the number of devices
+        removed or condemned; a shortfall (everything is parked or
+        mid-switch) is re-attempted every round until satisfied."""
+        taken = 0
+        if jid is None and self.free:
+            grab = min(n_devices, len(self.free))
+            devs = [self.free.pop() for _ in range(grab)]
+            ids = {self._dev_id(d) for d in devs}
+            self.devices = [d for d in self.devices
+                            if self._dev_id(d) not in ids]
+            self.n_gpus -= grab
+            self.capacity_lost += grab
+            self.devices_revoked += grab
+            taken += grab
+            self.events.append({
+                "round": self.round, "op": "revoke", "job": None,
+                "jid": None, "from_p": 0, "to_p": 0, "mp": 1, "loaned": 0,
+                "devices": [self._dev_id(d) for d in devs],
+                "source": "free_pool"})
+        while taken < n_devices:
+            victims = [j for j in self.running.values()
+                       if (jid is None or j.jid == jid)
+                       and j.trainer.controller.phase is Phase.IDLE]
+            if not victims:
+                self._deferred_revocations.append((jid, n_devices - taken))
+                break
+            victim = max(victims, key=lambda j: (j.devices_held, -j.jid))
+            got = self._revoke_from(victim, n_devices - taken)
+            if not got:
+                self._deferred_revocations.append((jid, n_devices - taken))
+                break
+            taken += got
+        return taken
+
+    def _revoke_from(self, job: ClusterJob, want: int) -> int:
+        """Reclaim up to ``want`` devices from one running job, in whole
+        mp-sized groups. The revoked groups are condemned NOW — ownership
+        transfers at the commit (or when the preemption save lands), and
+        ``_return_devices`` removes them from the cluster then."""
+        trainer = job.trainer
+        mp = job.mp
+        groups = min(-(-want // mp), job.alloc)     # ceil, capped
+        if groups < 1:
+            return 0
+        target = job.feasible_p(job.alloc - groups)
+        doomed = trainer.devices[-groups * mp:]
+        self._condemned.update(self._dev_id(d) for d in doomed)
+        self.devices_revoked += len(doomed)
+        self._event("revoke", job, job.alloc,
+                    target if target >= 1 else 0, devices=doomed,
+                    loaned=0, steps_done=job.steps_done)
+        job._fault_t0 = time.monotonic()
+        if target >= 1:
+            try:
+                trainer.release_devices(job.alloc - target)
+            except (Busy, ValueError):
+                self._preempt(job)      # can't shrink live: park instead
+        else:
+            # infeasible survivor set (e.g. the n_virtual % p clamp):
+            # checkpoint-stop; re-admission restores onto the smaller pool
+            self._preempt(job)
+        return len(doomed)
+
+    def _retry_deferred_revocations(self):
+        deferred, self._deferred_revocations = \
+            self._deferred_revocations, []
+        for jid, n in deferred:
+            if jid is not None and (jid not in self.jobs or
+                                    self.jobs[jid].finish_time is not None):
+                continue                # target gone; revocation moot
+            self.revoke_devices(n, jid=jid)
+
     # ----------------------------------------------------------- profiling
     def _maybe_profile(self):
         """Opt-in EDL §5.2: when devices sit idle, run ONE scale-in
@@ -598,7 +845,7 @@ class ClusterExecutor:
             t.join(timeout=120)
         p = job.alloc
         freed = list(job.trainer.devices)
-        self.free.extend(freed)
+        self._return_devices(freed)
         job.trainer.devices = []
         job.state = JobState.FINISHED
         del self.running[job.jid]
@@ -630,6 +877,9 @@ class ClusterExecutor:
                    or self._to_arrive) and self.round < max_rounds:
                 self._admit_arrivals()
                 self._collect_checkpoints()
+                if self.injector is not None:
+                    self.injector.tick(self)
+                self._retry_deferred_revocations()
                 if self.round and self.round % self.resched_every == 0:
                     self._reschedule()
                 self._satisfy_wants()
@@ -637,6 +887,7 @@ class ClusterExecutor:
                     self._maybe_profile()
                 for job in list(self.running.values()):
                     self._step_job(job)
+                self._detect_failures()
                 if not self.running and self.checkpointing:
                     self._await_checkpoint()
                 self._assert_conserved()
@@ -722,6 +973,19 @@ class ClusterExecutor:
                                 if e["op"] == "readmit"),
             "reshapes": sum(1 for e in self.events
                             if e["op"] == "reshape"),
+            # fault-tolerance accounting (all zero on a fault-free run)
+            "n_gpus_initial": self.n_gpus_initial,
+            "capacity_lost": self.capacity_lost,
+            "workers_killed": self.workers_killed,
+            "devices_revoked": self.devices_revoked,
+            "checkpoint_retries": self.ckpt_retry_total,
+            "recoveries": len(self.recovery_latencies),
+            "mean_recovery_latency_s": (
+                round(sum(self.recovery_latencies) /
+                      len(self.recovery_latencies), 4)
+                if self.recovery_latencies else None),
+            "faults_pending": (len(self.injector.pending)
+                               if self.injector is not None else 0),
             "conserved": True,      # run() asserts it every round
             "jobs": [self.jobs[jid].summary() for jid in sorted(self.jobs)],
             "events": self.events,

@@ -65,6 +65,10 @@ class CoordinationStore:
             self._data[key] = new
             if ttl is not None:
                 self._leases[key] = self._clock() + ttl
+            else:
+                # mirror put(): a ttl-less write is durable — a stale lease
+                # left by the previous writer must not expire the new value
+                self._leases.pop(key, None)
             self._notify(key, new)
             return True
 

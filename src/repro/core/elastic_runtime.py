@@ -155,6 +155,10 @@ class ElasticTrainer:
         self.controller = ScalingController()
         self.straggler_detector = StragglerDetector()
         self.injected_delay: dict[str, float] = {}
+        # chaos surface: a worker in this set has crashed — it sends no
+        # more gradient-sync requests, so the leader's liveness view
+        # (membership) goes stale until dead-worker detection fires
+        self.failed_workers: set[str] = set()
 
         # bring up the initial topology (this is job launch, not scaling)
         self._exec_cache: dict[tuple, ExecHandle] = {}
@@ -217,10 +221,12 @@ class ElasticTrainer:
         if not self.n_virtual:
             self.iters[wid] = WorkerDataIterator(
                 wid, self.pipeline, self.dataset, prefetch=False)
-        self.membership.register(wid, len(self.worker_ids) - 1)
+        self.membership.register(wid, len(self.worker_ids) - 1,
+                                 at_step=getattr(self, "step_idx", 0))
         return wid
 
     def _remove_worker(self, wid: str, *, dead: bool = False):
+        self.failed_workers.discard(wid)
         it = self.iters.pop(wid, None)
         if it is None:              # virtual mode: no per-slice data state
             self.pipeline.release(wid, dead=dead)
@@ -355,6 +361,10 @@ class ElasticTrainer:
         self.step_time_ema = (t_step if self.step_time_ema is None
                               else 0.7 * self.step_time_ema + 0.3 * t_step)
         for wid in self.worker_ids:
+            if wid in self.failed_workers:
+                continue    # a crashed worker sends no gradient-sync: its
+                # membership record ages out and dead_workers() flags it
+                # after miss_threshold steps (EDL §4.1 liveness)
             self.membership.sync(wid, self.step_idx, sync_times[wid])
         self.throughput_log.append(
             (time.monotonic(), self.p, self.global_batch / t_step))
@@ -407,9 +417,76 @@ class ElasticTrainer:
         return self._request("migrate", self.p, block=block,
                              victims=victims, n_join=len(victims))
 
+    # ------------------------------------------------------ failure surface
+    def inject_worker_failure(self, worker_id: str | None = None) -> str:
+        """Chaos entry point: crash a worker. From now on it sends no
+        gradient-sync requests, so ``membership.dead_workers`` flags it
+        after ``miss_threshold`` missed steps — DETECTION, not injection,
+        is what triggers recovery (the injector only breaks things)."""
+        wid = worker_id if worker_id is not None else self.worker_ids[-1]
+        if wid not in self.worker_ids:
+            raise ValueError(f"unknown worker {wid!r}")
+        self.failed_workers.add(wid)
+        return wid
+
+    def dead_workers(self) -> list[str]:
+        """Workers the leader's liveness view currently believes dead."""
+        return [w for w in self.membership.dead_workers(self.step_idx)
+                if w in self.worker_ids]
+
+    def handle_failure(self, dead: list[str], *, release: bool = True,
+                       block: bool = False) -> ScalingRecord | None:
+        """Automatic stop-free recovery (EDL §4.2: forced exit is a
+        special case of scale-in). The dead workers' device groups are
+        moved to the tail of the pool so the survivor mesh is built from
+        live devices only, then a scale-in is requested with the dead
+        workers as victims — plus, when the feasibility clamp (batch /
+        ``n_virtual`` divisibility) skips the shape right below, extra
+        graceful victims. Training keeps stepping through the background
+        context prep; at commit the dead workers' data partitions return
+        via ``pipeline.release(dead=True)`` (replay from the original
+        offset) and the freed devices go to ``on_devices_released`` when
+        ``release`` is set.
+
+        Raises ``Busy`` while another operation is in flight (caller
+        retries) and ``ValueError`` when no feasible survivor shape
+        exists — the caller's fallback is a checkpoint-stop."""
+        dead = [w for w in dead if w in self.worker_ids]
+        if not dead:
+            return None
+        if self.controller.phase is not Phase.IDLE:
+            raise Busy("scaling in flight; retry later")
+        target = self.p - len(dead)
+        while target >= 1 and (self.global_batch % target or
+                               (self.n_virtual and
+                                self.n_virtual % target)):
+            target -= 1
+        if target < 1:
+            raise ValueError(
+                f"no feasible parallelism below p={self.p} without the "
+                f"{len(dead)} dead worker(s) (batch={self.global_batch}, "
+                f"virtual_workers={self.n_virtual})")
+        survivors = [w for w in self.worker_ids if w not in dead]
+        victims = survivors[target:] + dead     # clamp-forced extras exit
+        # re-order the pool: victims' groups to the tail, so the survivor
+        # mesh uses devices[:target*mp] (all live) and the commit frees
+        # exactly the victims' (and any parked surplus) devices. Safe
+        # pre-prep: the running executable holds its own mesh reference.
+        mp = self.model_parallel
+        group = {w: self.devices[i * mp:(i + 1) * mp]
+                 for i, w in enumerate(self.worker_ids)}
+        surplus = self.devices[len(self.worker_ids) * mp:]
+        keep = [w for w in self.worker_ids if w not in victims]
+        self.devices = ([d for w in keep for d in group[w]] +
+                        [d for w in victims for d in group[w]] + surplus)
+        return self._request("scale_in", target, block=block,
+                             victims=victims, release=release,
+                             dead=tuple(dead))
+
     def _request(self, op: str, target_p: int, *, block: bool,
                  victims=None, n_join: int | None = None,
-                 release: bool = False, target_mp: int | None = None):
+                 release: bool = False, target_mp: int | None = None,
+                 dead: tuple = ()):
         target_mp = (target_mp if target_mp is not None
                      else self.model_parallel)
         avail = len(self.devices) // target_mp
@@ -428,6 +505,7 @@ class ElasticTrainer:
         plan.record.from_mp = self.model_parallel
         plan.record.to_mp = target_mp
         plan.exiting = tuple(victims or ())
+        plan.dead_exiting = tuple(dead)
         plan.joining = ("new",) * (n_join or max(0, target_p - self.p))
         plan.release_devices = release
         steps_before = self.step_idx
@@ -464,7 +542,7 @@ class ElasticTrainer:
             victims = list(plan.exiting) or self.worker_ids[handle.p:]
             leader_leaving = self.leader_id in victims
             for wid in victims:
-                self._remove_worker(wid)
+                self._remove_worker(wid, dead=wid in plan.dead_exiting)
             if leader_leaving:
                 self.election.resign()
                 self.election = LeaderElection(self.store, self.job_handle,

@@ -24,7 +24,12 @@ def use_approximate() -> bool:
 
 def fail_worker(trainer, worker_id: str) -> None:
     """Simulate a worker crash: it stops syncing; the leader detects it via
-    missing gradient-sync requests (Membership.dead_workers)."""
+    missing gradient-sync requests (Membership.dead_workers). The failure
+    is persistent — the step loop skips the crashed worker's sync from now
+    on (without that, the next step() would re-sync it back to life and
+    mask the crash from any detection later than one step) — and its
+    liveness record is aged out so detection can fire immediately."""
+    getattr(trainer, "failed_workers", set()).add(worker_id)
     trainer.membership.workers[worker_id].last_sync_step = -10**9
 
 

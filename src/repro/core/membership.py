@@ -27,8 +27,15 @@ class Membership:
         self.workers: dict[str, WorkerInfo] = {}
         self.miss_threshold = miss_threshold
 
-    def register(self, worker_id: str, slice_index: int):
-        self.workers[worker_id] = WorkerInfo(worker_id, slice_index)
+    def register(self, worker_id: str, slice_index: int, *,
+                 at_step: int = 0):
+        """``at_step`` is the job step the worker joined at: registration
+        counts as its first sync, so a slice added by a mid-run scale-out
+        is not flagged dead in the window before its first mini-batch
+        (``last_sync_step`` defaulting to -1 made any join after step
+        ``miss_threshold`` look instantly dead)."""
+        self.workers[worker_id] = WorkerInfo(worker_id, slice_index,
+                                             last_sync_step=at_step)
 
     def remove(self, worker_id: str):
         self.workers.pop(worker_id, None)

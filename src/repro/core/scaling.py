@@ -83,6 +83,10 @@ class SwitchPlan:
     ready: bool = False
     exec_handle: object = None  # (mesh, compiled fns, shardings)
     exiting: tuple = ()         # worker ids leaving (scale-in / migrate)
+    dead_exiting: tuple = ()    # subset of exiting that CRASHED: their data
+                                # partitions release via release(dead=True)
+                                # (replay from the original offset) instead
+                                # of a graceful remainder hand-back
     joining: tuple = ()
     release_devices: bool = False   # hand freed devices back at commit
                                     # (cluster executor's reclaim path)

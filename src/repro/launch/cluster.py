@@ -184,6 +184,11 @@ def main(argv=None):
                     help="persistent JAX compilation-cache directory: "
                          "repeated topologies skip recompilation across "
                          "rounds and runs")
+    ap.add_argument("--faults", default=None, metavar="PATH_OR_SPEC",
+                    help="fault-injection plan replayed against the run: "
+                         "a FaultPlan JSON trace file, or an inline "
+                         "'random:seed=0,kills=1,revokes=1,rounds=40' "
+                         "spec (repro.chaos)")
     ap.add_argument("--devices", type=int, default=_N_DEV)
     ap.add_argument("--batch", type=int, default=12)
     ap.add_argument("--seq", type=int, default=64)
@@ -213,12 +218,17 @@ def main(argv=None):
     policy = make_policy(args.policy, **policy_kw)
     model = (MeasuredModel() if args.throughput_model == "measured"
              else AnalyticModel())
+    faults = None
+    if args.faults:
+        from repro.chaos import FaultPlan
+        faults = FaultPlan.parse(args.faults)
     t0 = time.monotonic()
     ex = ClusterExecutor(specs, policy, resched_every=args.resched_every,
                          throughput_model=model,
                          profile_sweeps=args.profile_sweeps,
                          profile_ttl=args.profile_ttl,
-                         compile_cache=args.compile_cache)
+                         compile_cache=args.compile_cache,
+                         faults=faults)
     stats = ex.run(max_rounds=args.max_rounds)
     stats["wall_s"] = round(time.monotonic() - t0, 2)
     ex.close()      # drop parked-job checkpoint state (unreachable now)
@@ -248,7 +258,8 @@ def main(argv=None):
                   f"{e['job']:>8s}  {shape}")
             continue
         mp = f" x{e['mp']}dev" if e.get("mp", 1) != 1 else ""
-        print(f"  round {e['round']:3d}  {e['op']:>9s}  {e['job']:>8s}  "
+        print(f"  round {e['round']:3d}  {e['op']:>9s}  "
+              f"{e['job'] or '-':>8s}  "
               f"p {e['from_p']} -> {e['to_p']}{mp}{loan}")
     print(f"device conservation: {'OK' if stats['conserved'] else 'LEAK'}; "
           f"max transient loan: {stats['max_loaned']} device(s); "
@@ -256,6 +267,13 @@ def main(argv=None):
           f"(re-admitted {stats['readmissions']}); "
           f"reshapes: {stats['reshapes']}; "
           f"profile sweeps: {stats['profile_sweeps']}")
+    if args.faults:
+        lat = stats["mean_recovery_latency_s"]
+        print(f"faults: {stats['workers_killed']} worker(s) killed, "
+              f"{stats['devices_revoked']} device(s) revoked, pool "
+              f"{stats['n_gpus_initial']} -> {stats['n_gpus']}; "
+              f"{stats['recoveries']} recoveries"
+              + (f" (mean latency {lat}s)" if lat is not None else ""))
     return 0
 
 

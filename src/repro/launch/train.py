@@ -28,7 +28,14 @@ records + exactly-once data accounting as JSON.
       --schedule out:2@30,in:2@120
 
 Schedule grammar: ``<op>:<n>@<step>`` with op in {out, in, migrate,
-stop_resume_out, stop_resume_in, stop_resume_mp, straggler, fail}.
+stop_resume_out, stop_resume_in, stop_resume_mp, straggler, fail, kill,
+kill_leader}. ``kill:n`` crashes the last n workers WITHOUT an explicit
+recovery call: they stop sending gradient-syncs, the leader's liveness
+view flags them dead after ``miss_threshold`` missed steps, and the
+driver's detection loop triggers an automatic stop-free
+``handle_failure`` scale-in (``kill_leader`` crashes the current leader
+instead, forcing a re-election at the commit). ``fail`` is the legacy
+blocking path (immediate ``recover`` under USE_APPX_RECOVERY).
 ``stop_resume_mp:M`` checkpoint-stops the job and resumes it reparallelized
 at model-parallel degree M (device footprint held constant) — with
 ``--virtual-workers`` on, the restored run continues the bitwise-exact
@@ -95,6 +102,12 @@ def main(argv=None):
         elif opn == "fail":
             fail_worker(trainer, trainer.worker_ids[-1])
             recover(trainer)
+        elif opn == "kill":
+            # no recovery call here: detection (below) must find them
+            for wid in list(reversed(trainer.worker_ids))[:n]:
+                trainer.inject_worker_failure(wid)
+        elif opn == "kill_leader":
+            trainer.inject_worker_failure(trainer.leader_id)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     trainer = ElasticTrainer(
@@ -133,6 +146,16 @@ def main(argv=None):
                 schedule.setdefault(trainer.step_idx + 5, []).append(
                     (opn, n))
         m = trainer.step()
+        # automatic dead-worker recovery: the leader's liveness view
+        # (missed gradient-syncs) drives a stop-free scale-in; training
+        # continues through the background prep and the trajectory is
+        # bitwise-preserved under --virtual-workers
+        dead = trainer.dead_workers()
+        if dead and trainer.controller.phase is Phase.IDLE:
+            try:
+                trainer.handle_failure(dead)
+            except (Busy, ValueError):
+                pass    # retried next step / no feasible survivor shape
         if m is None:
             if trainer.controller.phase is Phase.SCHEDULED:
                 trainer._commit_switch()

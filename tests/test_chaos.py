@@ -1,0 +1,520 @@
+"""Chaos-grade fault tolerance (EDL §4): seeded fault-injection plans
+replayed against the multi-tenant executor.
+
+Every test asserts the same three cluster-level invariants under churn:
+
+  * training CONTINUES — a dead worker triggers an automatic stop-free
+    scale-in (forced exit as a special case of scale-in, §4.2), or a
+    checkpoint-park + re-admission when no feasible survivor shape
+    exists — never a hung or lost job;
+  * device CONSERVATION holds over the whole event log — a condemned
+    (dead / revoked) device stays accounted to its job until the
+    recovery commits, then leaves the cluster rather than re-funding
+    grants;
+  * no job loses ATTAINED SERVICE — steps done before the fault are
+    never replayed from zero.
+
+Fast tests drive the executor with a ChaosFakeTrainer (FakeTrainer + the
+liveness/failure surface of the real ElasticTrainer). The seeded
+random-schedule sweep uses hypothesis when available and falls back to a
+deterministic seed range otherwise. Slow tests replay a fault plan
+against the real cluster driver in a subprocess.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.chaos import FaultEvent, FaultInjector, FaultPlan
+from repro.cluster.executor import ClusterExecutor
+from repro.cluster.job import JobSpec, JobState
+from repro.cluster.policy import ScriptedPolicy, make_policy
+from repro.core.membership import Membership
+from repro.sched.base import MaxThroughput
+from test_cluster import FakeCheckpointer, FakeTrainer, _find
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+pytestmark = pytest.mark.chaos
+
+MISS = 3
+
+
+# --------------------------------------------------------------- fake layer
+class ChaosFakeTrainer(FakeTrainer):
+    """FakeTrainer + the failure surface the executor's detection loop
+    drives on the real ElasticTrainer: a Membership liveness view fed by
+    per-step syncs (crashed workers stop syncing), ``inject_worker_failure``
+    and an instant-commit ``handle_failure`` with the same feasibility
+    clamp and victim arithmetic (dead groups freed, clamp-forced extras
+    exit gracefully). Worker ids are positional (w0..w{p-1}) like the
+    base fake, so membership is rebuilt after every resize."""
+
+    def __init__(self, spec, devices):
+        super().__init__(spec, devices)
+        self.failed_workers = set()
+        self.step_idx = 0
+        self._init_membership()
+
+    def _init_membership(self):
+        self.membership = Membership(miss_threshold=MISS)
+        for i, w in enumerate(self.worker_ids):
+            self.membership.register(w, i, at_step=self.step_idx)
+
+    def step(self):
+        m = super().step()
+        self.step_idx += 1
+        for w in self.worker_ids:
+            if w not in self.failed_workers:
+                self.membership.sync(w, self.step_idx, m["step_time"])
+        return m
+
+    def inject_worker_failure(self, worker_id=None):
+        wid = worker_id if worker_id is not None else self.worker_ids[-1]
+        if wid not in self.worker_ids:
+            raise ValueError(f"unknown worker {wid!r}")
+        self.failed_workers.add(wid)
+        self.membership.workers[wid].last_sync_step = -10**9
+        return wid
+
+    def handle_failure(self, dead, *, release=True, block=False):
+        dead = [w for w in dead if w in self.worker_ids]
+        if not dead:
+            return None
+        target = self.p - len(dead)
+        while target >= 1 and self.global_batch % target:
+            target -= 1
+        if target < 1:
+            raise ValueError("no feasible survivor shape")
+        mp = self.model_parallel
+        group = {w: self.devices[i * mp:(i + 1) * mp]
+                 for i, w in enumerate(self.worker_ids)}
+        survivors = [w for w in self.worker_ids if w not in dead]
+        victims = survivors[target:] + dead
+        keep = [w for w in self.worker_ids if w not in victims]
+        surplus = self.devices[len(self.worker_ids) * mp:]
+        freed = [d for w in victims for d in group[w]]
+        self.devices = [d for w in keep for d in group[w]] + surplus
+        self._p = target
+        self.failed_workers.clear()
+        self._init_membership()
+        if release and self.on_devices_released:
+            self.on_devices_released(self, freed)
+        return None
+
+    def grant_devices(self, devs, *, block=False):
+        super().grant_devices(devs, block=block)
+        self._init_membership()
+
+    def release_devices(self, n, *, victims=None, block=False):
+        super().release_devices(n, victims=victims, block=block)
+        self.failed_workers.clear()
+        self._init_membership()
+
+
+def run_chaos_cluster(specs, policy, *, faults=None, rounds=60,
+                      devices=4, resched_every=2, checkpointer=None):
+    ex = ClusterExecutor(specs, policy, devices=list(range(devices)),
+                         resched_every=resched_every,
+                         trainer_factory=ChaosFakeTrainer,
+                         checkpointer=checkpointer or FakeCheckpointer(),
+                         faults=faults)
+    stats = ex.run(max_rounds=rounds)
+    return ex, stats
+
+
+def _assert_service_preserved(ex):
+    """No job loses attained service: the steps a job had done at every
+    fault event are a floor on its final step count (parking preserves
+    progress; only forward motion after)."""
+    floors = {}
+    for e in ex.events:
+        if e["op"] in ("worker_dead", "revoke") and e["jid"] is not None:
+            floors[e["jid"]] = max(floors.get(e["jid"], 0),
+                                   e.get("steps_done", 0))
+    for jid, floor in floors.items():
+        assert ex.jobs[jid].steps_done >= floor, \
+            f"job {jid} lost attained service: {ex.jobs[jid].steps_done} " \
+            f"< {floor}"
+
+
+def _assert_device_ledger(ex):
+    """Capacity accounting closes: what's left is what we started with
+    minus what the faults removed, and nothing is condemned forever."""
+    assert ex.n_gpus == ex.n_gpus_initial - ex.capacity_lost
+    assert len(ex.devices) == ex.n_gpus
+    live = sum(j.devices_held for j in ex.jobs.values())
+    assert live + len(ex.free) == ex.n_gpus
+
+
+# ----------------------------------------------------------- plan mechanics
+def test_fault_plan_roundtrip_and_validation():
+    plan = FaultPlan(events=(
+        FaultEvent("revoke_devices", at=5, n_devices=2),
+        FaultEvent("kill_worker", at=3, jid=0, worker=1),
+        FaultEvent("crash_checkpoint", at=7),
+        FaultEvent("delay_worker", at=4, jid=1, delay_s=0.1),
+    ), seed=9)
+    assert [e.at for e in plan.events] == [3, 4, 5, 7], \
+        "plans replay in (round, kind) order regardless of authoring order"
+    again = FaultPlan.from_json(plan.to_json())
+    assert again.events == plan.events and again.seed == 9
+    d = plan.events[0].to_dict()
+    assert "n_devices" not in d and "delay_s" not in d, \
+        "serialized events drop default-valued fields"
+    with pytest.raises(ValueError, match="kind"):
+        FaultEvent("set_on_fire", at=1)
+    with pytest.raises(ValueError, match="round"):
+        FaultEvent("kill_worker", at=-1)
+    with pytest.raises(ValueError, match="device"):
+        FaultEvent("revoke_devices", at=1, n_devices=0)
+
+
+def test_fault_plan_random_is_seed_deterministic():
+    a = FaultPlan.random(7, rounds=40, kills=2, revokes=2, crashes=1)
+    b = FaultPlan.random(7, rounds=40, kills=2, revokes=2, crashes=1)
+    assert a.events == b.events, "same seed, same plan — replayable"
+    c = FaultPlan.random(8, rounds=40, kills=2, revokes=2, crashes=1)
+    assert a.events != c.events
+    assert all(e.at < 40 for e in a.events)
+
+
+def test_fault_plan_parse_spec_and_file(tmp_path):
+    p = FaultPlan.parse("random:seed=3,kills=1,revokes=2")
+    kinds = sorted(e.kind for e in p.events)
+    assert kinds == ["kill_worker", "revoke_devices", "revoke_devices"]
+    f = tmp_path / "trace.json"
+    p.save(str(f))
+    assert FaultPlan.load(str(f)).events == p.events
+    assert FaultPlan.parse(str(f)).events == p.events
+    with pytest.raises(ValueError):
+        FaultPlan.parse("random:seed=1,frobs=2")
+    with pytest.raises(ValueError):
+        FaultPlan.parse("no-such-file.json")
+
+
+# ----------------------------------------------- dead worker -> scale-in
+def test_kill_triggers_automatic_stop_free_scale_in():
+    """The acceptance path: a worker of the 3-wide tenant dies; the
+    leader's liveness view flags it; the executor scales the job in
+    stop-free — no checkpoint, no park — and the dead device leaves the
+    cluster instead of rejoining the free pool."""
+    plan = FaultPlan(events=(FaultEvent("kill_worker", at=3, jid=0,
+                                        worker=2),))
+    ex, stats = run_chaos_cluster(
+        [JobSpec("a", 3, 20, profile="resnet50")], make_policy("static"),
+        faults=plan, devices=3)
+    dead = _find(stats["events"], "worker_dead", "a")
+    assert dead and dead[0]["workers"] == ["w2"]
+    assert len(dead[0]["devices"]) == 1
+    rec = _find(stats["events"], "recovered", "a")
+    assert rec and rec[0]["mode"] == "stop_free", \
+        "a feasible survivor shape recovers WITHOUT checkpointing"
+    assert not _find(stats["events"], "preempt", "a")
+    job = ex.jobs[0]
+    assert job.state is JobState.FINISHED and job.steps_done == 20
+    steps = [m["step"] for m in job.trainer.metrics_log]
+    assert steps == list(range(steps[0], steps[0] + len(steps))), \
+        "training continued straight through the failure"
+    assert stats["workers_killed"] == 1 and stats["capacity_lost"] == 1
+    assert ex.n_gpus == 2 and dead[0]["devices"][0] not in \
+        [getattr(d, "id", d) for d in ex.devices], \
+        "the dead worker's device left the cluster"
+    assert stats["recoveries"] == 1 and stats["conserved"]
+    _assert_device_ledger(ex)
+
+
+def test_kill_sole_worker_falls_back_to_checkpoint_park():
+    """No survivor shape exists below p=1: recovery degrades to a
+    checkpoint-park, and the job re-admits onto remaining capacity with
+    its attained service intact."""
+    plan = FaultPlan(events=(FaultEvent("kill_worker", at=3, jid=0),))
+    ex, stats = run_chaos_cluster(
+        [JobSpec("a", 1, 12, profile="resnet50")], make_policy("static"),
+        faults=plan, devices=2)
+    assert _find(stats["events"], "worker_dead", "a")
+    pre = _find(stats["events"], "preempt", "a")
+    assert pre, "infeasible survivor set must checkpoint-park"
+    rec = _find(stats["events"], "recovered", "a")
+    assert rec and rec[0]["mode"] == "checkpoint"
+    re_ = _find(stats["events"], "readmit", "a")
+    assert re_ and re_[0]["round"] > pre[0]["round"]
+    job = ex.jobs[0]
+    assert job.state is JobState.FINISHED and job.steps_done == 12
+    assert job.summary()["final_step"] == 12, \
+        "attained service survives the park (no step reset)"
+    assert ex.n_gpus == 1, "the dead device left; the spare carried the job"
+    assert stats["conserved"]
+    _assert_service_preserved(ex)
+    _assert_device_ledger(ex)
+
+
+def test_kill_clamp_forces_extra_graceful_victims():
+    """Batch divisibility can forbid p-1: a batch-9 job at p=3 losing one
+    worker cannot land on p=2 (9 % 2 != 0), so the clamp walks down to
+    p=1 and one SURVIVOR exits gracefully alongside the dead worker. Only
+    the dead device leaves the cluster; the graceful victim's device
+    returns to the free pool."""
+    plan = FaultPlan(events=(FaultEvent("kill_worker", at=3, jid=0,
+                                        worker=2),))
+    ex, stats = run_chaos_cluster(
+        [JobSpec("a", 3, 30, profile="resnet50", global_batch=9)],
+        make_policy("static"), faults=plan, devices=3)
+    job = ex.jobs[0]
+    assert job.state is JobState.FINISHED and job.steps_done == 30
+    sin = _find(stats["events"], "scale_in", "a")
+    assert sin and sin[0]["from_p"] == 3 and sin[0]["to_p"] == 1, \
+        "one death + the divisibility clamp exits TWO workers"
+    assert stats["workers_killed"] == 1 and stats["capacity_lost"] == 1, \
+        "only the dead worker's device is condemned"
+    assert ex.n_gpus == 2 and len(ex.free) == 2, \
+        "the graceful victim's device came home to the pool"
+    rec = _find(stats["events"], "recovered", "a")
+    assert rec and rec[0]["mode"] == "stop_free"
+    assert stats["conserved"]
+    _assert_device_ledger(ex)
+
+
+def test_injector_drops_events_for_finished_jobs():
+    plan = FaultPlan(events=(FaultEvent("kill_worker", at=10, jid=0),))
+    ex, stats = run_chaos_cluster(
+        [JobSpec("a", 1, 5, profile="resnet50"),
+         JobSpec("b", 1, 30, profile="googlenet")],
+        make_policy("static"), faults=plan, devices=2, rounds=60)
+    assert ex.jobs[0].state is JobState.FINISHED
+    dropped = [r for r in ex.injector.log if r["outcome"] == "dropped"]
+    assert dropped and "finished" in dropped[0]["reason"], \
+        "an unfireable event is dropped WITH a logged reason, not hung"
+    assert stats["faults_pending"] == 0
+
+
+# --------------------------------------------------------------- revocation
+def test_revoke_takes_free_devices_first():
+    plan = FaultPlan(events=(FaultEvent("revoke_devices", at=2,
+                                        n_devices=2),))
+    ex, stats = run_chaos_cluster(
+        [JobSpec("a", 2, 15, profile="resnet50")], make_policy("static"),
+        faults=plan, devices=4)
+    rev = [e for e in stats["events"] if e["op"] == "revoke"]
+    assert rev and rev[0]["jid"] is None and rev[0]["source"] == "free_pool"
+    assert len(rev[0]["devices"]) == 2
+    assert ex.jobs[0].state is JobState.FINISHED
+    assert not _find(stats["events"], "scale_in", "a") and \
+        not _find(stats["events"], "worker_dead", "a"), \
+        "idle capacity absorbs the revocation; the tenant never notices"
+    assert ex.n_gpus == 2 and stats["devices_revoked"] == 2
+    assert stats["conserved"]
+    _assert_device_ledger(ex)
+
+
+def test_revoke_running_job_shrinks_stop_free():
+    """Revoking more than the free pool reclaims the remainder from the
+    biggest running tenant via a live release — the condemned group
+    leaves the cluster at the commit, the survivors keep training."""
+    plan = FaultPlan(events=(FaultEvent("revoke_devices", at=3,
+                                        n_devices=3),))
+    ex, stats = run_chaos_cluster(
+        [JobSpec("a", 2, 25, profile="resnet50")], make_policy("static"),
+        faults=plan, devices=4)
+    rev = [e for e in stats["events"] if e["op"] == "revoke"]
+    assert len(rev) == 2, "free-pool grab + running-job reclaim"
+    assert rev[0]["source"] == "free_pool" and len(rev[0]["devices"]) == 2
+    assert rev[1]["job"] == "a" and len(rev[1]["devices"]) == 1
+    rec = _find(stats["events"], "recovered", "a")
+    assert rec and rec[0]["mode"] == "stop_free"
+    job = ex.jobs[0]
+    assert job.state is JobState.FINISHED and job.steps_done == 25
+    sin = _find(stats["events"], "scale_in", "a")
+    assert sin and sin[0]["to_p"] == 1, "the survivor keeps training at p=1"
+    assert ex.n_gpus == 1 and stats["devices_revoked"] == 3
+    assert stats["conserved"]
+    _assert_service_preserved(ex)
+    _assert_device_ledger(ex)
+
+
+def test_revoke_infeasible_parks_and_readmits_on_survivor_pool():
+    """A pinned revocation against a 1-wide tenant has no feasible
+    survivor shape: checkpoint-park, then re-admission onto the pool
+    that's left — the checkpoint-stop fallback of the state machine."""
+    plan = FaultPlan(events=(FaultEvent("revoke_devices", at=3, jid=0),))
+    ex, stats = run_chaos_cluster(
+        [JobSpec("a", 1, 12, profile="resnet50")], make_policy("static"),
+        faults=plan, devices=2)
+    pre = _find(stats["events"], "preempt", "a")
+    re_ = _find(stats["events"], "readmit", "a")
+    assert pre and re_, "park then re-admit"
+    rec = _find(stats["events"], "recovered", "a")
+    assert rec and rec[0]["mode"] == "checkpoint"
+    job = ex.jobs[0]
+    assert job.state is JobState.FINISHED and job.steps_done == 12
+    assert job.summary()["final_step"] == 12
+    assert ex.n_gpus == 1 and stats["conserved"]
+    _assert_service_preserved(ex)
+    _assert_device_ledger(ex)
+
+
+def test_revocation_defers_until_a_target_exists():
+    """A revocation aimed at a parked job (nothing running yet) is
+    deferred and retried every round until it can fire — not silently
+    dropped."""
+    plan = FaultPlan(events=(FaultEvent("revoke_devices", at=0, jid=0),))
+    specs = [JobSpec("a", 2, 15, profile="resnet50", arrival=4.0)]
+    ex, stats = run_chaos_cluster(specs, make_policy("static"),
+                                  faults=plan, devices=2)
+    rev = _find(stats["events"], "revoke", "a")
+    assert rev and rev[0]["round"] >= 4, \
+        "the revocation waits for the job to be admitted"
+    assert ex.n_gpus == 1 and stats["conserved"]
+    _assert_device_ledger(ex)
+
+
+# ------------------------------------------------------- checkpoint crashes
+def test_checkpoint_crash_is_retried_and_lands():
+    """An in-flight preemption save crashes (injected); the executor
+    retries the save instead of losing the state or the devices, the
+    park completes and the tenant still finishes."""
+    plan = FaultPlan(events=(FaultEvent("crash_checkpoint", at=1),))
+    pol = ScriptedPolicy({2: {0: 0}, 6: {0: 2}})
+    ex, stats = run_chaos_cluster([JobSpec("a", 2, 12)], pol,
+                                  faults=plan, devices=4)
+    failed = [e for e in stats["events"] if e["op"] == "checkpoint_failed"]
+    assert failed and failed[0]["attempt"] == 1
+    assert "injected fault" in failed[0]["error"]
+    assert stats["checkpoint_retries"] == 1
+    assert _find(stats["events"], "preempt", "a"), "the retried save lands"
+    job = ex.jobs[0]
+    assert job.state is JobState.FINISHED and job.steps_done == 12
+    assert job.summary()["final_step"] == 12
+    assert ex.n_gpus == 4, "a checkpoint crash never costs capacity"
+    assert stats["conserved"]
+    _assert_device_ledger(ex)
+
+
+def test_checkpoint_crash_exhausts_retry_budget_loudly():
+    class AlwaysCrash(FakeCheckpointer):
+        def done(self, job):
+            raise RuntimeError("disk on fire")
+
+    pol = ScriptedPolicy({2: {0: 0}})
+    ex = ClusterExecutor([JobSpec("a", 2, 12)], pol,
+                         devices=list(range(2)), resched_every=2,
+                         trainer_factory=ChaosFakeTrainer,
+                         checkpointer=AlwaysCrash(), ckpt_max_retries=2)
+    with pytest.raises(RuntimeError, match="disk on fire"):
+        ex.run(max_rounds=20)
+    assert ex.ckpt_retry_total >= 3, "budget + the final re-raise attempt"
+    assert ex.jobs[0].devices_held == 2, \
+        "devices never move on the failure path (no leak, no double-fund)"
+
+
+# ------------------------------------------------------------- stragglers
+def test_delay_worker_feeds_straggler_machinery():
+    plan = FaultPlan(events=(FaultEvent("delay_worker", at=2, jid=0,
+                                        worker=1, delay_s=0.2),))
+    ex, stats = run_chaos_cluster(
+        [JobSpec("a", 2, 10, profile="resnet50")], make_policy("static"),
+        faults=plan, devices=2)
+    inj = _find(stats["events"], "inject_delay", "a")
+    assert inj and inj[0]["worker"] == "w1" and inj[0]["delay_s"] == 0.2
+    assert ex.jobs[0].trainer.injected_delay.get("w1") == 0.2
+    assert ex.jobs[0].state is JobState.FINISHED
+    assert stats["conserved"]
+
+
+# ------------------------------------------- seeded random schedule sweep
+def _chaos_invariants(seed):
+    """One seeded random kill/revocation/crash schedule against two live
+    tenants; every cluster-level invariant must hold regardless of what
+    the schedule drew."""
+    plan = FaultPlan.random(seed, rounds=30, n_jobs=2, kills=2,
+                            revokes=1, crashes=1, max_devices=1)
+    specs = [JobSpec("a", 3, 25, profile="vgg19"),
+             JobSpec("b", 2, 20, profile="resnet50")]
+    ex, stats = run_chaos_cluster(specs, MaxThroughput(), faults=plan,
+                                  devices=6, rounds=120)
+    # conservation held every round (run() asserts) and the ledger closes
+    assert stats["conserved"]
+    _assert_device_ledger(ex)
+    _assert_service_preserved(ex)
+    # every injected event reached a recorded outcome; none vanished
+    outcomes = {r["outcome"] for r in ex.injector.log}
+    assert outcomes <= {"fired", "partial", "dropped"}
+    # jobs either finished, or are parked/queued with service intact on a
+    # pool the faults shrank too far — never lost, never reset
+    for job in ex.jobs.values():
+        if job.state is JobState.FINISHED:
+            assert job.steps_done == job.spec.total_steps
+        else:
+            assert job.state in (JobState.PENDING, JobState.PREEMPTED,
+                                 JobState.RUNNING)
+            assert job.steps_done <= job.spec.total_steps
+    # the final pool is exactly initial minus what the faults removed
+    assert ex.n_gpus == ex.n_gpus_initial - ex.capacity_lost
+
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=16, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.integers(min_value=0, max_value=10_000))
+    def test_random_fault_schedules_keep_invariants(seed):
+        _chaos_invariants(seed)
+except ImportError:
+    @pytest.mark.parametrize("seed", range(16))
+    def test_random_fault_schedules_keep_invariants(seed):
+        _chaos_invariants(seed)
+
+
+def test_random_schedule_replay_is_deterministic():
+    """The same plan replayed against the same workload produces the
+    same event sequence — fault traces are debugging artifacts."""
+    def run():
+        plan = FaultPlan.random(11, rounds=25, n_jobs=2, kills=2,
+                                revokes=1)
+        specs = [JobSpec("a", 3, 25, profile="vgg19"),
+                 JobSpec("b", 2, 20, profile="resnet50")]
+        ex, _ = run_chaos_cluster(specs, MaxThroughput(), faults=plan,
+                                  devices=6, rounds=120)
+        return [(e["round"], e["op"], e["jid"]) for e in ex.events]
+
+    assert run() == run()
+
+
+# ----------------------------------------------------------- live (slow)
+@pytest.mark.slow
+def test_live_cluster_survives_fault_plan(tmp_path):
+    """The real driver under a revocation + kill trace: conservation
+    holds, capacity leaves the pool, and both tenants keep (or finish)
+    their work."""
+    plan = FaultPlan(events=(
+        FaultEvent("kill_worker", at=6, jid=0, worker=1),
+        FaultEvent("revoke_devices", at=10, n_devices=1),
+    ))
+    trace = tmp_path / "trace.json"
+    plan.save(str(trace))
+    cmd = [sys.executable, "-m", "repro.launch.cluster", "--json",
+           "--devices", "6", "--policy", "static",
+           # job a must outlive the background prep of its recovery
+           # scale-in (an XLA compile spanning many rounds): a job that
+           # FINISHES before the commit is fine service-wise but leaves
+           # nothing for the recovered-event asserts below to see
+           "--jobs", "a=resnet50:3:60@0,b=googlenet:1:10@0",
+           "--faults", str(trace), "--max-rounds", "400"]
+    env = {**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")}
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                         cwd=ROOT, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    s = json.loads(out.stdout.strip().splitlines()[-1])
+    assert s["conserved"] is True
+    assert s["workers_killed"] == 1
+    assert s["capacity_lost"] >= 1
+    assert s["n_gpus"] == 6 - s["capacity_lost"]
+    dead = [e for e in s["events"] if e["op"] == "worker_dead"]
+    assert dead and dead[0]["job"] == "a"
+    assert [e for e in s["events"] if e["op"] == "recovered"]
+    for j in s["jobs"]:
+        assert j["steps_done"] > 0, j

@@ -60,6 +60,84 @@ def test_resign_handoff():
     assert e1.elect().is_self
 
 
+def test_resign_only_deletes_own_leadership():
+    """A non-leader's resign (a graceful exit of a FOLLOWER) must not
+    depose the actual leader."""
+    s = CoordinationStore()
+    e0 = LeaderElection(s, "job", "w0")
+    e1 = LeaderElection(s, "job", "w1")
+    assert e0.elect().is_self
+    e1.resign()                           # w1 was never the leader
+    assert s.get("leader/job") == "w0", "w0 keeps its leadership"
+    r = e1.elect()
+    assert not r.is_self and r.leader_id == "w0"
+
+
+def test_cas_without_ttl_clears_stale_lease():
+    """Bugfix regression: a ttl-less CAS used to leave the PREVIOUS
+    writer's lease in place, so the new value silently expired on the old
+    writer's clock — inconsistent with put(), which treats a ttl-less
+    write as durable."""
+    clk = VirtualClock()
+    s = CoordinationStore(clock=clk)
+    s.put("k", "a", ttl=5.0)
+    assert s.cas("k", "a", "b")           # durable overwrite, no ttl
+    clk.t = 100.0
+    assert s.get("k") == "b", "the stale lease must not expire the CAS'd value"
+
+
+def test_reelection_on_member_death_full_cycle():
+    """The §4.1 loop end-to-end: the leader dies (stops syncing AND stops
+    refreshing its lease); membership flags it dead, the lapsed lease
+    notifies the watchers, a survivor wins the re-election, and the new
+    leader's refresh keeps the new lease alive."""
+    clk = VirtualClock()
+    s = CoordinationStore(clock=clk)
+    m = Membership(miss_threshold=2)
+    elections = {w: LeaderElection(s, "job", w, ttl=5.0)
+                 for w in ("w0", "w1", "w2")}
+    for i, w in enumerate(elections):
+        m.register(w, i)
+    assert elections["w0"].elect().is_self
+    expired = []
+    elections["w1"].watch_expiry(lambda: expired.append(1))
+    # w1/w2 keep syncing; the leader goes silent after step 1
+    m.sync("w0", 1, 0.1)
+    for step in range(1, 6):
+        m.sync("w1", step, 0.1)
+        m.sync("w2", step, 0.1)
+    assert m.dead_workers(current_step=5) == ["w0"]
+    clk.t = 6.0                           # ... its lease lapses too
+    s.sweep()
+    assert expired, "survivors are notified of the vacancy"
+    r1 = elections["w1"].elect()
+    assert r1.is_self and r1.leader_id == "w1"
+    m.remove("w0")
+    # a zombie w0 coming back cannot steal leadership mid-lease
+    r0 = elections["w0"].elect()
+    assert not r0.is_self and r0.leader_id == "w1"
+    assert elections["w1"].refresh()
+    clk.t = 10.0
+    assert s.get("leader/job") == "w1", "the refreshed lease holds"
+
+
+def test_membership_mid_run_join_is_not_instantly_dead():
+    """Bugfix regression: a worker REGISTERED mid-run (scale-out at step
+    100) used to carry last_sync_step=-1 and look dead on arrival; it
+    must get a liveness grace window from its join step."""
+    m = Membership(miss_threshold=2)
+    m.register("w0", 0)
+    for step in range(1, 101):
+        m.sync("w0", step, 0.1)
+    m.register("w1", 1, at_step=100)      # joins at step 100, no sync yet
+    assert m.dead_workers(current_step=100) == []
+    assert m.dead_workers(current_step=102) == [], "grace window holds"
+    for step in range(101, 104):
+        m.sync("w0", step, 0.1)           # the incumbent keeps syncing
+    assert m.dead_workers(current_step=103) == ["w1"], \
+        "a joiner that NEVER syncs is eventually dead for real"
+
+
 def test_expiry_watch_fires():
     clk = VirtualClock()
     s = CoordinationStore(clock=clk)

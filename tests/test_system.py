@@ -136,3 +136,40 @@ def test_checkpoint_restore_cross_shape_bitwise():
                for e in reshaped["scaling_events"]), reshaped
     assert static["losses"] == reshaped["losses"][:len(static["losses"])], \
         (static["losses"], reshaped["losses"])
+
+
+@pytest.mark.slow
+@pytest.mark.chaos
+def test_vw_determinism_survives_worker_kill():
+    """Determinism under failure: a worker of the vw=8 run is killed with
+    NO explicit recovery call — liveness detection triggers the automatic
+    stop-free scale-in (4 -> 2: the n_virtual % p clamp skips p=3) — and
+    the disturbed trajectory still matches the undisturbed static run
+    with exact equality, loss for loss."""
+    static = run_driver("--init-p", "2", "--virtual-workers", "8",
+                        steps=12, batch=8)
+    killed = run_driver("--init-p", "4", "--virtual-workers", "8",
+                        "--schedule", "kill:1@4", steps=12, batch=8)
+    assert killed["final_p"] == 2, \
+        "detection must scale in automatically (8 %% 3 != 0 clamps to 2)"
+    sin = [e for e in killed["scaling_events"] if e["op"] == "scale_in"]
+    assert sin and sin[0]["from_p"] == 4 and sin[0]["to_p"] == 2
+    assert len(static["losses"]) == 12
+    assert len(killed["losses"]) >= 12
+    assert killed["losses"][:12] == static["losses"], \
+        (static["losses"], killed["losses"][:12])
+
+
+@pytest.mark.slow
+@pytest.mark.chaos
+def test_leader_death_reelects_and_training_continues():
+    """Killing the LEADER exercises detection + scale-in + re-election at
+    the commit: a survivor takes over leadership and the run completes
+    with a decreasing loss."""
+    s = run_driver("--init-p", "3", "--virtual-workers", "6",
+                   "--schedule", "kill_leader:1@5", steps=30, batch=6)
+    assert s["final_p"] == 2
+    sin = [e for e in s["scaling_events"] if e["op"] == "scale_in"]
+    assert sin and sin[0]["from_p"] == 3 and sin[0]["to_p"] == 2
+    assert s["leader"] != "w0", "a survivor must win the re-election"
+    assert s["final_loss"] < s["first_loss"]
