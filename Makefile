@@ -2,7 +2,7 @@
 PY ?= python
 
 .PHONY: test test-fast test-chaos docs-check cluster-demo bench-cluster \
-	bench-smoke bench-reshape bench-reshape-det bench-chaos
+	bench-smoke bench-reshape bench-reshape-det bench-chaos bench-overhead
 
 # the tier-1 command: full suite, fail fast
 test:
@@ -48,6 +48,15 @@ bench-smoke:
 	PYTHONPATH=src $(PY) benchmarks/cluster_bench.py \
 	  --policies throughput --throughput-model measured \
 	  --jobs "a=vgg19:2:6@0,b=resnet50:1:8@0" --max-rounds 150
+
+# regression-tracked adjustment-overhead budget: cold + warm (4,1)->(2,2)
+# reshape through the compile service; commits a baseline on first run,
+# fails on >2x regression of the stop window or the cold prep (or when
+# the hard budgets break: stop <= 50 ms, warm e2e >= 5x cold); runs in CI
+bench-overhead:
+	PYTHONPATH=src \
+	  XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+	  $(PY) -m benchmarks.scaling_overhead --overhead-only
 
 # goodput-under-churn: the same workload fault-free vs under a seeded
 # kill+revocation trace; recovery latencies and retained goodput land in

@@ -198,7 +198,10 @@ class ClusterExecutor:
 
     def __init__(self, specs: list[JobSpec], policy, *, devices=None,
                  resched_every: int = 4, trainer_factory=None,
-                 prep_yield_s: float = 0.15, serialize_prep: bool = True,
+                 prep_yield_s: float = 0.15,
+                 serialize_prep: bool | None = None,
+                 compile_service=None, compile_workers: int = 2,
+                 prefetch_shapes: bool = False, prefetch_limit: int = 2,
                  checkpointer=None, throughput_model=None,
                  profile_sweeps: bool = False, profile_steps: int = 3,
                  profile_ttl: float | None = None,
@@ -238,7 +241,25 @@ class ClusterExecutor:
         self.resched_every = resched_every
         self.trainer_factory = trainer_factory or default_trainer_factory
         self.prep_yield_s = prep_yield_s
-        self.serialize_prep = serialize_prep
+        # adjustment-overhead pipeline: context preps run as priority
+        # tickets in ONE bounded CompileService pool — committed switches
+        # outrank speculative prefetches, pending shapes are cancellable,
+        # and every job's prep makes progress concurrently. The pool bound
+        # is what protects small hosts now; the legacy cluster-wide
+        # ``serialize_prep=True`` boolean (one prep at a time, everything
+        # else re-planned later) remains available as an explicit opt-out
+        # and disables the service.
+        self.serialize_prep = bool(serialize_prep)
+        if serialize_prep or compile_service is False:
+            self.compile_service = None
+        elif compile_service is not None:
+            self.compile_service = compile_service
+        else:
+            from repro.core.compile_service import CompileService
+            self.compile_service = CompileService(workers=compile_workers)
+        self.prefetch_shapes = prefetch_shapes and \
+            self.compile_service is not None
+        self.prefetch_limit = prefetch_limit
         self.checkpointer = checkpointer or DiskCheckpointer()
         self.jobs = {jid: ClusterJob(jid, s) for jid, s in enumerate(specs)}
         self.pending: list[ClusterJob] = []
@@ -375,6 +396,10 @@ class ClusterExecutor:
         trainer = job.launch(devs, self.trainer_factory, mp=mp)
         trainer.on_devices_released = self._on_devices_released
         trainer._cluster_jid = job.jid
+        if self.compile_service is not None:
+            # route this trainer's background preps through the shared
+            # priority queue (fakes simply never read the attribute)
+            trainer.compile_service = self.compile_service
         if job in self.pending:
             self.pending.remove(job)
         readmit = job.checkpoint is not None
@@ -585,6 +610,47 @@ class ClusterExecutor:
             self._event("scale_out", job, cur, cur + take, devices=devs)
             if cur + take >= target:
                 del self._wants[jid]
+
+    # ------------------------------------------------ speculative prefetch
+    def _prefetch_shapes(self):
+        """Warm the exec caches with the policy's LIKELY-NEXT shapes
+        (sched.base.likely_next_shapes) on idle host threads: a later
+        committed RESHAPE/resize that lands on a prefetched shape finds a
+        warm handle and its prep collapses to a cache lookup. Tickets are
+        SPECULATIVE — any committed prep outranks them in the service
+        queue — and a shape that leaves the likely set is cancelled
+        before a worker picks it up (re-plan obsolescence)."""
+        svc = self.compile_service
+        from repro.sched.base import likely_next_shapes
+        for jid, job in list(self.running.items()):
+            trainer = job.trainer
+            build = getattr(trainer, "_build_exec", None)
+            if build is None:       # protocol fakes have no executables
+                continue
+            owner = ("spec", jid)
+            keep = set()
+            shapes = likely_next_shapes(self.policy, self, job,
+                                        limit=self.prefetch_limit)
+            for p, mp in shapes:
+                need, held = p * mp, job.devices_held
+                if need <= held:
+                    devs = trainer.devices
+                elif need - held <= len(self.free):
+                    # the device prefix a growth grant would produce:
+                    # grants append free devices in pool order
+                    devs = list(trainer.devices) + self.free[:need - held]
+                else:
+                    continue        # infeasible right now; not likely
+                key = trainer._exec_key(p, mp, devs)
+                keep.add(key)
+                if key in trainer._exec_cache:
+                    continue
+                from repro.core.compile_service import PRIO_SPECULATIVE
+                devs = list(devs)
+                svc.submit(key, lambda b=build, p=p, mp=mp, d=devs:
+                           b(p, mp, devices=d),
+                           priority=PRIO_SPECULATIVE, owner=owner)
+            svc.cancel_owner(owner, keep=keep)
 
     # ----------------------------------------------- failures & revocation
     def _devices_of(self, trainer, wids) -> list:
@@ -839,10 +905,13 @@ class ClusterExecutor:
     def _finish(self, job: ClusterJob):
         job.finish_time = self.now
         # an in-flight context prep still reads trainer.devices from its
-        # thread; let it land before the pool takes the devices back
-        t = getattr(job.trainer, "_prep_thread", None)
-        if t is not None and t.is_alive():
-            t.join(timeout=120)
+        # worker; let it land before the pool takes the devices back —
+        # and stop speculating about a job that no longer has a future
+        if self.compile_service is not None:
+            self.compile_service.cancel_owner(("spec", job.jid))
+        join = getattr(job.trainer, "join_prep", None)
+        if join is not None:
+            join(120)
         p = job.alloc
         freed = list(job.trainer.devices)
         self._return_devices(freed)
@@ -883,6 +952,9 @@ class ClusterExecutor:
                 if self.round and self.round % self.resched_every == 0:
                     self._reschedule()
                 self._satisfy_wants()
+                if self.prefetch_shapes and \
+                        self.round % self.resched_every == 0:
+                    self._prefetch_shapes()
                 if self.profile_sweeps:
                     self._maybe_profile()
                 for job in list(self.running.values()):
@@ -891,13 +963,7 @@ class ClusterExecutor:
                 if not self.running and self.checkpointing:
                     self._await_checkpoint()
                 self._assert_conserved()
-                # cooperative yield: background context-prep threads share
-                # the host's cores with training; on small hosts
-                # back-to-back steps can starve an in-flight compile
-                if self.prep_yield_s and any(
-                        j.trainer.controller.phase is Phase.PREPARING
-                        for j in self.running.values()):
-                    time.sleep(self.prep_yield_s)
+                self._prep_yield()
                 self.round += 1
         except BaseException:
             # contained shutdown on the error path: join compile/save
@@ -914,14 +980,48 @@ class ClusterExecutor:
         self._drain_checkpoints()
         return self.stats()
 
+    def _prep_yield(self):
+        """Cooperative yield: background context preps share the host's
+        cores with training; on small hosts back-to-back steps can starve
+        an in-flight compile. Unlike the old fixed ``sleep(prep_yield_s)``
+        — which kept burning a full quantum every round even after the
+        prep had landed — this WAITS on the prep itself (ticket or
+        thread) and returns the moment the handle is ready, re-checking
+        the phase so an already-prepared job costs nothing."""
+        if not self.prep_yield_s:
+            return
+        deadline = time.monotonic() + self.prep_yield_s
+        for job in list(self.running.values()):
+            trainer = job.trainer
+            if trainer.controller.phase is not Phase.PREPARING:
+                continue        # prepared (or idle) since the step ran:
+                                # no quantum owed for this job
+            left = deadline - time.monotonic()
+            if left <= 0:
+                break
+            join = getattr(trainer, "join_prep", None)
+            if join is not None:
+                join(left)
+            else:               # opaque prep (test fakes): legacy sleep
+                time.sleep(left)
+
     def _drain_prep_threads(self):
         """Join any context-prep still compiling in the background: a
         daemon thread inside XLA compile at interpreter shutdown aborts the
-        whole process (libc++ ``terminate``)."""
+        whole process (libc++ ``terminate``). Speculative prefetch tickets
+        are cancelled (pending) or awaited (running) the same way."""
         for job in self.jobs.values():
-            t = getattr(job.trainer, "_prep_thread", None)
-            if t is not None and t.is_alive():
-                t.join(timeout=120)
+            join = getattr(job.trainer, "join_prep", None)
+            if join is not None:
+                join(120)
+            else:
+                t = getattr(job.trainer, "_prep_thread", None)
+                if t is not None and t.is_alive():
+                    t.join(timeout=120)
+        if self.compile_service is not None:
+            for jid in list(self.jobs):
+                self.compile_service.cancel_owner(("spec", jid))
+            self.compile_service.drain(120)
 
     def _drain_checkpoints(self):
         """Land in-flight checkpoint saves at loop exit so parked state is
@@ -941,6 +1041,8 @@ class ClusterExecutor:
         ending with PREEMPTED jobs (or max_rounds exhaustion) leak
         full-model state dumps in the checkpoint root. run() itself stays
         re-enterable; call close() only when done with the executor."""
+        if self.compile_service is not None:
+            self.compile_service.shutdown()
         discard = getattr(self.checkpointer, "discard", None)
         if discard is None:
             return
@@ -987,6 +1089,9 @@ class ClusterExecutor:
             "faults_pending": (len(self.injector.pending)
                                if self.injector is not None else 0),
             "conserved": True,      # run() asserts it every round
+            "compile_service": (self.compile_service.stats()
+                                if self.compile_service is not None
+                                else None),
             "jobs": [self.jobs[jid].summary() for jid in sorted(self.jobs)],
             "events": self.events,
         }

@@ -1,4 +1,6 @@
 from repro.core.api import EDLJob
+from repro.core.compile_service import CompileService, CompileTicket, \
+    PRIO_COMMITTED, PRIO_SPECULATIVE
 from repro.core.coordination import CoordinationStore
 from repro.core.elastic_runtime import ElasticTrainer
 from repro.core.election import LeaderElection
@@ -7,7 +9,9 @@ from repro.core.scaling import Busy, ScalingController, ScalingRecord
 from repro.core.stop_resume import checkpoint_save, checkpoint_stop, \
     resume_from_checkpoint, stop_resume_rescale, teardown_trainer
 
-__all__ = ["EDLJob", "CoordinationStore", "ElasticTrainer", "LeaderElection",
-           "Membership", "StragglerDetector", "Busy", "ScalingController",
-           "ScalingRecord", "stop_resume_rescale", "checkpoint_save",
-           "checkpoint_stop", "resume_from_checkpoint", "teardown_trainer"]
+__all__ = ["EDLJob", "CompileService", "CompileTicket", "PRIO_COMMITTED",
+           "PRIO_SPECULATIVE", "CoordinationStore", "ElasticTrainer",
+           "LeaderElection", "Membership", "StragglerDetector", "Busy",
+           "ScalingController", "ScalingRecord", "stop_resume_rescale",
+           "checkpoint_save", "checkpoint_stop", "resume_from_checkpoint",
+           "teardown_trainer"]

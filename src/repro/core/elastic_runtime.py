@@ -114,7 +114,8 @@ class ElasticTrainer:
                  store: CoordinationStore | None = None, seed: int = 0,
                  devices=None, use_aot: bool = True,
                  virtual_workers: int | str | None = None,
-                 time_allowance_s: float = TIME_ALLOWANCE_S):
+                 time_allowance_s: float = TIME_ALLOWANCE_S,
+                 compile_service=None, overlap_reshard: bool = True):
         self.cfg = cfg
         self.global_batch = global_batch
         self.seq_len = seq_len
@@ -128,6 +129,13 @@ class ElasticTrainer:
         # paper default 500 ms; cluster executor shrinks it for smoke-scale
         # jobs whose whole lifetime is a few seconds
         self.time_allowance_s = time_allowance_s
+        # adjustment-overhead pipeline: when a CompileService is attached
+        # (ctor arg, or set by the cluster executor after launch), context
+        # preps run as priority tickets in its bounded pool instead of a
+        # private daemon thread; overlap_reshard stages the switch's state
+        # move during the draining mini-batch (see step())
+        self.compile_service = compile_service
+        self.overlap_reshard = overlap_reshard
 
         # deterministic elasticity (EasyScale-style virtual workers):
         # n_virtual fixes the logical parallelism for the job's lifetime;
@@ -162,6 +170,7 @@ class ElasticTrainer:
 
         # bring up the initial topology (this is job launch, not scaling)
         self._exec_cache: dict[tuple, ExecHandle] = {}
+        self._exec_lock = threading.Lock()
         self.p = init_parallelism
         self._worker_seq = 0
         self.worker_ids: list[str] = []
@@ -185,6 +194,8 @@ class ElasticTrainer:
         self.metrics_log: list[dict] = []
         self.throughput_log: list[tuple[float, int, float]] = []
         self._prep_thread: threading.Thread | None = None
+        self._prep_ticket = None        # CompileTicket when service-backed
+        self._prep_error: BaseException | None = None
         # cluster-executor hand-off: called with (trainer, freed_devices)
         # when a release_devices() scale-in commits
         self.on_devices_released: Callable | None = None
@@ -239,28 +250,45 @@ class ElasticTrainer:
         self.straggler_detector.reset(wid)
 
     # ---------------------------------------------------------- executables
-    def _build_exec(self, p: int, mp: int | None = None) -> ExecHandle:
+    def _exec_key(self, p: int, mp: int | None = None,
+                  devices=None) -> tuple:
+        """The exec-cache identity of shape (p, mp) on a device prefix.
+        Order matters: mesh layout and shardings are position-dependent,
+        so the same device set in a different order is a different
+        executable."""
+        mp = mp if mp is not None else self.model_parallel
+        devs = devices if devices is not None else self.devices
+        return (p, mp, tuple(d.id for d in devs[: p * mp]))
+
+    def _build_exec(self, p: int, mp: int | None = None,
+                    devices=None) -> ExecHandle:
         """Execution-context preparation for shape (p, mp): mesh +
         shardings + AOT-compiled step. This is the cost stop-free scaling
         hides. ``mp`` defaults to the job's current model-parallel degree;
-        the RESHAPE verb passes a different one.
+        the RESHAPE verb passes a different one. ``devices`` overrides the
+        job's live pool — the speculative-prefetch path builds for a
+        PREDICTED device set (e.g. the job's pool plus the free devices a
+        growth grant would append) without touching trainer state.
 
-        Handles are cached per (p, mp, exact ordered devices) — order
-        matters: the mesh layout and shardings are position-dependent, so
-        the same device set in a different order is a different executable.
+        Handles are cached per (p, mp, exact ordered devices).
         Re-scaling to a topology this job already ran on (compact/expand
-        cycles under a cluster policy, migrate at constant p) skips the
-        recompile entirely; the cache is LRU-bounded so a long-lived job
-        cycling through loaner combinations cannot pin unbounded compiled
-        executables. The stop-resume baseline clears the cache — a
-        restarted process pays context preparation from zero."""
+        cycles under a cluster policy, migrate at constant p, a prefetched
+        shape) skips the recompile entirely; the cache is LRU-bounded so a
+        long-lived job cycling through loaner combinations cannot pin
+        unbounded compiled executables. The stop-resume baseline clears
+        the cache — a restarted process pays context preparation from
+        zero. Cache access is lock-guarded: the compile service may build
+        speculative handles on a worker thread while the main thread
+        steps; the expensive compile itself runs outside the lock."""
         mp = mp if mp is not None else self.model_parallel
-        key = (p, mp, tuple(d.id for d in self.devices[: p * mp]))
-        cached = self._exec_cache.get(key)
-        if cached is not None:
-            self._exec_cache[key] = self._exec_cache.pop(key)   # LRU touch
-            return cached
-        mesh = make_mesh(p, mp, devices=np.array(self.devices[: p * mp]))
+        devs = list(devices if devices is not None else self.devices)
+        key = self._exec_key(p, mp, devs)
+        with self._exec_lock:
+            cached = self._exec_cache.get(key)
+            if cached is not None:
+                self._exec_cache[key] = self._exec_cache.pop(key)  # LRU
+                return cached
+        mesh = make_mesh(p, mp, devices=np.array(devs[: p * mp]))
         st_sh = state_sharding(self.cfg, mesh, self.optimizer)
         from repro.configs.base import InputShape, input_specs
         shape = InputShape("rt", self.seq_len, self.global_batch, "train")
@@ -286,9 +314,10 @@ class ElasticTrainer:
             step_fn = jax.jit(fn, in_shardings=(st_sh, b_sh),
                               out_shardings=(st_sh, None))
         handle = ExecHandle(p, mp, mesh, step_fn, st_sh, b_sh)
-        self._exec_cache[key] = handle
-        while len(self._exec_cache) > EXEC_CACHE_MAX:
-            self._exec_cache.pop(next(iter(self._exec_cache)))
+        with self._exec_lock:
+            handle = self._exec_cache.setdefault(key, handle)
+            while len(self._exec_cache) > EXEC_CACHE_MAX:
+                self._exec_cache.pop(next(iter(self._exec_cache)))
         return handle
 
     # -------------------------------------------------------------- stepping
@@ -347,7 +376,18 @@ class ElasticTrainer:
             return None
         dev_batch = jax.device_put(batch, self.exec.batch_shardings)
         self.state, metrics = self.exec.step_fn(self.state, dev_batch)
+        # first chance: the switch is already due at this step's boundary
+        # (the DRAINING mini-batch). JAX dispatch is async — step_fn's
+        # outputs are futures — so the state move onto the new mesh can be
+        # issued NOW and overlap the device compute itself.
+        self._maybe_stage_switch()
         jax.block_until_ready(metrics["loss"])
+        # second chance: the prep landed DURING this step (typical when
+        # k = 1: the switch commits at the very boundary the handle
+        # arrives before). Issued here, the transfers still overlap the
+        # straggler wait + host bookkeeping below instead of running
+        # inside the stop window.
+        self._maybe_stage_switch()
         # simulated per-worker sync times (straggler injection adds delay)
         base = time.monotonic() - t0
         sync_times = {wid: base + self.injected_delay.get(wid, 0.0)
@@ -509,13 +549,20 @@ class ElasticTrainer:
         plan.joining = ("new",) * (n_join or max(0, target_p - self.p))
         plan.release_devices = release
         steps_before = self.step_idx
+        key = self._exec_key(target_p, target_mp)
+        plan.record.exec_cache_key = key
+        with self._exec_lock:
+            cache_hit = key in self._exec_cache
+        plan.record.compile_cache_hit = cache_hit
 
-        def prepare():
-            handle = self._build_exec(target_p, target_mp)
+        def finish(handle):
             k = max(1, math.ceil(self.time_allowance_s /
                                  max(self.step_time_ema or 0.01, 1e-4)))
             plan.record.steps_during_prep = self.step_idx - steps_before
             self.controller.prepared(self.step_idx + k, handle)
+
+        def prepare():
+            finish(self._build_exec(target_p, target_mp))
 
         if block:
             prepare()
@@ -524,9 +571,70 @@ class ElasticTrainer:
                 if self.step() is None:
                     self._commit_switch()
             return self.controller.history[-1]
+        if cache_hit:
+            # warm shape (prefetched, or one this job already ran at):
+            # prep IS the cache lookup — schedule inline, no thread or
+            # ticket round trip, prep_s collapses to microseconds
+            prepare()
+            return None
+        svc = self.compile_service
+        if svc is not None:
+            from repro.core.compile_service import DONE, PRIO_COMMITTED
+
+            def on_ticket(t):
+                if t.state != DONE:
+                    # parity with the thread path's failure mode: the op
+                    # sticks in PREPARING, error kept for inspection
+                    self._prep_error = t.error
+                    return
+                finish(t.value)
+
+            # dedup/escalation: if a speculative prefetch of this shape
+            # is already pending or running, this JOINS it as committed
+            self._prep_ticket = svc.submit(
+                key, lambda: self._build_exec(target_p, target_mp),
+                priority=PRIO_COMMITTED, owner=self.job_handle)
+            self._prep_ticket.add_done_callback(on_ticket)
+            return None
         self._prep_thread = threading.Thread(target=prepare, daemon=True)
         self._prep_thread.start()
         return None
+
+    def _maybe_stage_switch(self):
+        """Stage the state move when a ready switch commits at the current
+        step's boundary (and overlap is on)."""
+        plan = self.controller.plan
+        if (self.overlap_reshard and plan is not None and plan.ready
+                and self.step_idx + 1 >= plan.switch_step):
+            self._stage_switch(plan)
+
+    def _stage_switch(self, plan):
+        """Overlapped state move: issue the switch's reshard/device_put
+        against the CURRENT state (whose producing step may still be in
+        flight — async dispatch queues the transfers behind it) into
+        fresh destination buffers on the new mesh. The staged arrays are
+        the double buffer: the live state keeps its own buffers until the
+        commit's pointer swap, so training output is untouched if the
+        commit never consumes the staging (it falls back to the in-stop
+        move)."""
+        if plan.staged_state is not None:
+            return
+        handle: ExecHandle = plan.exec_handle
+        if plan.record.op == "reshape":
+            from repro.reshape import StateSpec, apply_plan, plan_reshard
+            src = StateSpec.for_trainer(self)
+            dst = StateSpec.from_shardings(handle.p, handle.mp,
+                                           handle.state_shardings,
+                                           self.state)
+            rplan = plan_reshard(src, dst)
+            plan.record.reshard_bytes_moved = rplan.bytes_moved
+            plan.record.reshard_bytes_kept = rplan.bytes_kept
+            plan.record.bytes_moved_overlapped = rplan.bytes_moved
+            staged = apply_plan(rplan, self.state, handle.state_shardings)
+        else:
+            staged = jax.device_put(self.state, handle.state_shardings)
+        plan.staged_state = staged
+        plan.staged_from = self.state
 
     def _commit_switch(self):
         """The brief stop: reshard state (model broadcast) + swap topology."""
@@ -550,10 +658,17 @@ class ElasticTrainer:
                 self.leader_id = self.election.elect().leader_id
         while len(self.worker_ids) < handle.p:
             self._add_worker()
-        # model broadcast == reshard onto the new mesh. A reshape routes
-        # through the planner so the record carries the move accounting;
-        # plain data-axis scaling keeps the direct device_put.
-        if op == "reshape":
+        # model broadcast == reshard onto the new mesh. The overlapped
+        # path consumed nothing but host time so far: if the draining
+        # mini-batch staged the move (see _stage_switch) against exactly
+        # this state, the transfers have been in flight since dispatch —
+        # only the readiness wait + pointer swap remain in the stop.
+        # A reshape routes through the planner so the record carries the
+        # move accounting; plain data-axis scaling keeps the direct
+        # device_put.
+        if plan.staged_state is not None and plan.staged_from is self.state:
+            self.state = plan.staged_state
+        elif op == "reshape":
             from repro.reshape import StateSpec, apply_plan, plan_reshard
             src = StateSpec.for_trainer(self)
             dst = StateSpec.from_shardings(handle.p, handle.mp,
@@ -562,6 +677,7 @@ class ElasticTrainer:
             rplan = plan_reshard(src, dst)
             plan.record.reshard_bytes_moved = rplan.bytes_moved
             plan.record.reshard_bytes_kept = rplan.bytes_kept
+            plan.record.bytes_moved_overlapped = 0
             self.state = apply_plan(rplan, self.state,
                                     handle.state_shardings)
         else:
@@ -672,6 +788,24 @@ class ElasticTrainer:
             if on_step:
                 on_step(m)
         return done
+
+    def join_prep(self, timeout: float | None = None) -> bool:
+        """Wait (bounded) for the in-flight context prep, whichever engine
+        carries it — the legacy private thread or a compile-service
+        ticket. Returns True when no prep remains in flight. This is the
+        executor's event-driven replacement for fixed-quantum sleeps: the
+        wait returns the moment the handle lands."""
+        ticket = self._prep_ticket
+        if ticket is not None:
+            done = ticket.wait(timeout)
+            if done:
+                self._prep_ticket = None
+            return done
+        t = self._prep_thread
+        if t is not None and t.is_alive():
+            t.join(timeout)
+            return not t.is_alive()
+        return True
 
     def wait_for_scaling(self, max_steps: int = 10_000):
         """Keep training (stop-free!) until the in-flight scaling commits."""

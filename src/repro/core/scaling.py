@@ -48,6 +48,15 @@ class ScalingRecord:
     # reshape.plan_reshard accounting for the state move at commit
     reshard_bytes_moved: int = 0
     reshard_bytes_kept: int = 0
+    # adjustment-overhead pipeline provenance: was the exec handle already
+    # in the per-trainer cache at request time (prefetched / revisited
+    # shape — prep collapses to a cache lookup), and under which key
+    compile_cache_hit: bool = False
+    exec_cache_key: tuple | None = None
+    # bytes whose device_put started BEFORE the stop window opened
+    # (overlapped with the draining mini-batch); 0 = the whole state move
+    # ran inside the stop
+    bytes_moved_overlapped: int = 0
 
     @property
     def prep_time(self) -> float:
@@ -67,11 +76,17 @@ class ScalingRecord:
                "stop_s": round(self.stop_time, 4),
                "e2e_s": round(self.e2e_time, 4),
                "steps_during_prep": self.steps_during_prep,
-               "switch_step": self.switch_step}
+               "switch_step": self.switch_step,
+               "cache_hit": self.compile_cache_hit}
+        if self.exec_cache_key is not None:
+            # JSON-safe: (p, mp, (device ids...)) -> flat list
+            p, mp, devs = self.exec_cache_key
+            out["exec_cache_key"] = [p, mp, list(devs)]
         if (self.from_mp, self.to_mp) != (1, 1):
             out.update(from_mp=self.from_mp, to_mp=self.to_mp,
                        reshard_bytes_moved=self.reshard_bytes_moved,
-                       reshard_bytes_kept=self.reshard_bytes_kept)
+                       reshard_bytes_kept=self.reshard_bytes_kept,
+                       bytes_moved_overlapped=self.bytes_moved_overlapped)
         return out
 
 
@@ -90,6 +105,13 @@ class SwitchPlan:
     joining: tuple = ()
     release_devices: bool = False   # hand freed devices back at commit
                                     # (cluster executor's reclaim path)
+    # overlapped state move: the draining mini-batch stages the reshard —
+    # destination buffers (double-buffered against the live state) whose
+    # device_put was issued before the stop window opened. ``staged_from``
+    # pins the exact state object the staging read; a commit over any
+    # other state falls back to the in-stop move.
+    staged_state: object = None
+    staged_from: object = None
 
 
 class ScalingController:

@@ -184,6 +184,20 @@ def main(argv=None):
                     help="persistent JAX compilation-cache directory: "
                          "repeated topologies skip recompilation across "
                          "rounds and runs")
+    ap.add_argument("--prefetch-shapes", action="store_true",
+                    help="speculatively compile each job's likely-next "
+                         "shapes (sched.base.likely_next_shapes) on idle "
+                         "compile-service threads so a later committed "
+                         "resize/RESHAPE finds a warm exec handle")
+    ap.add_argument("--compile-workers", type=int, default=2,
+                    metavar="N",
+                    help="compile-service pool size: how many background "
+                         "context preps (XLA compiles) may run "
+                         "concurrently (default 2)")
+    ap.add_argument("--serialize-prep", action="store_true",
+                    help="legacy small-host throttle: one context prep at "
+                         "a time cluster-wide, no compile service (the "
+                         "pre-priority-queue behavior)")
     ap.add_argument("--faults", default=None, metavar="PATH_OR_SPEC",
                     help="fault-injection plan replayed against the run: "
                          "a FaultPlan JSON trace file, or an inline "
@@ -228,6 +242,9 @@ def main(argv=None):
                          profile_sweeps=args.profile_sweeps,
                          profile_ttl=args.profile_ttl,
                          compile_cache=args.compile_cache,
+                         prefetch_shapes=args.prefetch_shapes,
+                         compile_workers=args.compile_workers,
+                         serialize_prep=args.serialize_prep or None,
                          faults=faults)
     stats = ex.run(max_rounds=args.max_rounds)
     stats["wall_s"] = round(time.monotonic() - t0, 2)

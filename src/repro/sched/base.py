@@ -113,6 +113,57 @@ def best_shape(tm, job, devices: int, *,
     return best[2], best[1]
 
 
+def likely_next_shapes(policy, view, job, *, limit: int = 3
+                       ) -> list[tuple[int, int]]:
+    """The speculative-prefetch hook: the ``(groups, mp)`` shapes this
+    policy is LIKELY to target next for ``job`` — what the executor's
+    compile service warms on idle host threads so a later committed
+    resize/RESHAPE finds its executable already built.
+
+    Policies that know their own moves expose ``likely_shapes(view, job)``
+    (Tiresias: the ±1-group compaction/expansion targets and the QoS
+    floor; MaxThroughput: the water-filling neighbors — plus, for mp=auto
+    tenants, the ``best_shape`` re-factorizations of those budgets).
+    Policies without the hook get a generic neighborhood: ±1 group at the
+    live degree, and the best shape of the current device budget at the
+    other mp options. Predictions are free to be wrong — a prefetch that
+    never commits only cost idle host time, and a re-plan cancels shapes
+    that leave this set before they compile.
+
+    Returns feasible, deduplicated shapes, current shape excluded,
+    capped at ``limit``."""
+    hook = getattr(policy, "likely_shapes", None)
+    shapes = list(hook(view, job)) if hook is not None \
+        else _default_likely_shapes(view, job)
+    feasible = getattr(job, "feasible_p", lambda p: p)
+    cur = (job.alloc, group_size(job))
+    out: list[tuple[int, int]] = []
+    for p, mp in shapes:
+        p, mp = int(p), max(1, int(mp))
+        p = min(p, view.n_gpus // mp) if mp <= view.n_gpus else 0
+        p = feasible(p)
+        if p >= 1 and (p, mp) != cur and (p, mp) not in out:
+            out.append((p, mp))
+        if len(out) >= limit:
+            break
+    return out
+
+
+def _default_likely_shapes(view, job) -> list[tuple[int, int]]:
+    """Generic neighborhood for policies without a ``likely_shapes``
+    hook: the ±1-group resizes every elastic policy actually emits, and
+    (for mp=auto tenants) the re-factorizations of the current budget."""
+    gs = group_size(job)
+    shapes = [(job.alloc + 1, gs), (job.alloc - 1, gs)]
+    if getattr(job, "mp_auto", False):
+        tm = throughput_model_of(view)
+        budget = max(job.alloc, 1) * gs
+        for opt in mp_options(job):
+            if opt != gs:
+                shapes.append(best_shape(tm, job, budget, options=(opt,)))
+    return shapes
+
+
 def throughput_model_of(view):
     """The ThroughputModel the view's owner schedules with. Views that
     predate the seam (plain stand-ins in tests) fall back to the shared
@@ -192,6 +243,19 @@ class MaxThroughput:
     def __init__(self, *, min_gain: float = 0.0, max_per_job: int | None = None):
         self.min_gain = min_gain
         self.max_per_job = max_per_job      # cap in groups per job
+
+    def likely_shapes(self, view, job) -> list[tuple[int, int]]:
+        """Prefetch hook (likely_next_shapes): water-filling moves one
+        group at a time, so the ±1-group neighbors are exactly the next
+        reachable targets — plus their best re-factorizations for
+        mp=auto tenants (the reshape_targets pass runs on every call)."""
+        gs = group_size(job)
+        shapes = [(job.alloc + 1, gs), (job.alloc - 1, gs)]
+        if getattr(job, "mp_auto", False):
+            tm = throughput_model_of(view)
+            for budget in ((job.alloc + 1) * gs, max(1, job.alloc - 1) * gs):
+                shapes.append(best_shape(tm, job, budget))
+        return shapes
 
     def __call__(self, view) -> dict[int, int]:
         tm = throughput_model_of(view)

@@ -126,6 +126,27 @@ class Tiresias:
             alloc = reshape_targets(tm, jobs, alloc)
         return alloc
 
+    # -------------------------------------------------------- speculation
+    def likely_shapes(self, view, job) -> list[tuple[int, int]]:
+        """The shapes this policy's own rules actually emit for ``job`` —
+        the compile-prefetch hook (sched.base.likely_next_shapes). In
+        emission order (most likely first): R2 expansion (+1 group at the
+        live degree), R1 compaction (down toward the QoS floor, one group
+        at a time — the next compaction step, then the floor itself), the
+        submitted shape (re-admission / drift-correction target), and for
+        mp=auto elastic tenants the best re-factorizations of those
+        budgets (the R3 reshape pass)."""
+        gs = group_size(job)
+        floor = max(1, math.ceil(self.r * requested_devices(job) / gs))
+        shapes = [(job.alloc + 1, gs), (job.alloc - 1, gs), (floor, gs)]
+        req_mp = int(getattr(job, "requested_mp", 0) or gs)
+        shapes.append((job.requested_p, req_mp))
+        if self.elastic and getattr(job, "mp_auto", False):
+            tm = throughput_model_of(view)
+            for budget in ((job.alloc + 1) * gs, max(1, job.alloc - 1) * gs):
+                shapes.append(best_shape(tm, job, budget))
+        return shapes
+
     # ---------------------------------------------------------------- R1
     def _compact(self, tm, jobs, alloc, free, waiting):
         if len(waiting) <= self.N:
