@@ -2,7 +2,8 @@
 PY ?= python
 
 .PHONY: test test-fast test-chaos docs-check cluster-demo bench-cluster \
-	bench-smoke bench-reshape bench-reshape-det bench-chaos bench-overhead
+	bench-smoke bench-reshape bench-reshape-det bench-chaos bench-overhead \
+	bench-serving
 
 # the tier-1 command: full suite, fail fast
 test:
@@ -57,6 +58,15 @@ bench-overhead:
 	PYTHONPATH=src \
 	  XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 	  $(PY) -m benchmarks.scaling_overhead --overhead-only
+
+# serving-tier smoke: one live ServingJob replaying a short diurnal
+# request trace next to an elastic trainer — the lull loans replica
+# groups to training, every spike reclaims them; p99 SLO attainment vs
+# training goodput land in experiments/bench_serving.json; runs in CI
+bench-serving:
+	PYTHONPATH=src $(PY) benchmarks/cluster_bench.py \
+	  --serving-trace diurnal --policies throughput \
+	  --jobs "t=resnet50:1:40@0" --max-rounds 120
 
 # goodput-under-churn: the same workload fault-free vs under a seeded
 # kill+revocation trace; recovery latencies and retained goodput land in

@@ -215,6 +215,86 @@ def run_faults_bench(args):
     return 0 if churn["conserved"] else 1
 
 
+def run_serving_bench(args):
+    """Serving-tier mode (``--serving-trace``): replay a diurnal request
+    trace against one live ``ServingJob`` (real ``serve_batch`` waves,
+    measured latency) sharing the pool with the ``--jobs`` training
+    tenants under a reclaim-priority policy. The lull loans idle replica
+    groups to the trainers; every spike reclaims them. Reports p99 SLO
+    attainment vs training goodput (steps per scheduling round) and
+    writes experiments/bench_serving.json."""
+    from repro.cluster import ClusterExecutor, make_policy
+    from repro.launch.cluster import parse_jobs
+    from repro.sched.serving import CrossTierPolicy
+    from repro.sched.throughput import AnalyticModel, MeasuredModel
+
+    policy_name = args.policies.split(",")[0]
+    rounds = args.serving_rounds
+    knobs = (f":period={args.serving_period}:base={args.serving_base}"
+             f":peak={args.serving_peak}"
+             if args.serving_trace == "diurnal" else "")
+    text = (f"api=resnet50:1:{rounds}:serve={args.serving_trace}{knobs}"
+            f":cap={args.serving_cap}:slo={args.serving_slo}@0,"
+            + args.jobs)
+    specs = parse_jobs(text, batch=12, seq=64, n_samples=1 << 10,
+                       d_partitions=16, default_mp=args.model_parallel)
+    model = (MeasuredModel() if args.throughput_model == "measured"
+             else AnalyticModel())
+    policy = CrossTierPolicy(make_policy(policy_name))
+    t0 = time.monotonic()
+    ex = ClusterExecutor(specs, policy, throughput_model=model,
+                         resched_every=2,
+                         compile_cache=args.compile_cache)
+    stats = ex.run(max_rounds=args.max_rounds)
+    wall = round(time.monotonic() - t0, 2)
+    ex.close()
+
+    serving = [j for j in stats["jobs"] if j.get("tier") == "serving"]
+    training = [j for j in stats["jobs"] if j.get("tier") != "serving"]
+    train_steps = sum(j["steps_done"] for j in training)
+    goodput = round(train_steps / max(1, stats["rounds"]), 3)
+    ops = lambda kind, jids: sum(     # noqa: E731
+        1 for e in stats["events"] if e["op"] == kind and e["jid"] in jids)
+    sjids = {j["jid"] for j in serving}
+    tjids = {j["jid"] for j in training}
+    results = {
+        "policy": f"cross-tier({policy_name})",
+        "throughput_model": args.throughput_model,
+        "trace": {"kind": args.serving_trace, "rounds": rounds,
+                  "period": args.serving_period, "base": args.serving_base,
+                  "peak": args.serving_peak, "cap": args.serving_cap},
+        "slo_ms": args.serving_slo,
+        "serving": {"rounds_served": stats.get("rounds_served", 0),
+                    "slo_breaches": stats.get("slo_breaches", 0),
+                    "slo_attainment": stats.get("slo_attainment"),
+                    "scale_outs": ops("scale_out", sjids),
+                    "scale_ins": ops("scale_in", sjids),
+                    "jobs": serving},
+        "training": {"steps_done": train_steps,
+                     "goodput_steps_per_round": goodput,
+                     "loan_reclaims": ops("scale_in", tjids),
+                     "preemptions": stats["preemptions"],
+                     "jobs": training},
+        "max_loaned": stats["max_loaned"],
+        "rounds": stats["rounds"],
+        "wall_s": wall,
+        "conserved": stats["conserved"],
+    }
+    att = results["serving"]["slo_attainment"]
+    emit("serving_slo_attainment", (att or 0.0) * 1e6,
+         f"goodput={goodput}_steps_per_round")
+    save("serving", results)
+    print(f"serving trace {args.serving_trace} x{rounds} rounds under "
+          f"cross-tier({policy_name}): p99 SLO attainment "
+          + (f"{att:.1%}" if att is not None else "-")
+          + f" ({results['serving']['slo_breaches']} breach(es)), "
+          f"training goodput {goodput} steps/round, max loan "
+          f"{stats['max_loaned']} device(s), "
+          f"{results['training']['loan_reclaims']} loan reclaim(s) — "
+          f"{'OK' if stats['conserved'] else 'LEAK'}")
+    return 0 if stats["conserved"] and att is not None else 1
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--devices", type=int, default=4)
@@ -245,6 +325,20 @@ def main():
                          "the workload and report recovery latency + "
                          "goodput-under-churn vs the fault-free baseline "
                          "(writes experiments/bench_chaos.json)")
+    ap.add_argument("--serving-trace", default=None, metavar="TRACE",
+                    help="serving-tier mode: replay this request trace "
+                         "('diurnal' or a '/'-separated rate list) on one "
+                         "live ServingJob sharing the pool with --jobs, "
+                         "reporting p99 SLO attainment vs training "
+                         "goodput (writes experiments/bench_serving.json)")
+    ap.add_argument("--serving-rounds", type=int, default=36)
+    ap.add_argument("--serving-period", type=int, default=12)
+    ap.add_argument("--serving-base", type=float, default=6.0)
+    ap.add_argument("--serving-peak", type=float, default=30.0)
+    ap.add_argument("--serving-cap", type=int, default=12,
+                    help="requests one replica serves per wave")
+    ap.add_argument("--serving-slo", type=float, default=250.0,
+                    metavar="MS")
     ap.add_argument("--max-rounds", type=int, default=300)
     ap.add_argument("--compile-cache", default=None, metavar="DIR")
     args = ap.parse_args()
@@ -257,6 +351,8 @@ def main():
         return run_reshape_determinism_bench(args)
     if args.faults:
         return run_faults_bench(args)
+    if args.serving_trace:
+        return run_serving_bench(args)
     from repro.cluster import ClusterExecutor, make_policy
     from repro.launch.cluster import parse_jobs
     from repro.sched.throughput import AnalyticModel, MeasuredModel

@@ -2,49 +2,39 @@
 three architecture families (dense / MoE / attention-free RWKV6) — the same
 ``serve_step`` the decode_* dry-run shapes lower at production scale.
 
+The wave itself lives in ``repro.core.serving.serve_batch``; the cluster
+serving tier runs the identical loop per replica.
+
   PYTHONPATH=src python examples/elastic_serving.py
 """
 import sys
 import time
 
 import jax
-import jax.numpy as jnp
 
 
 def serve(arch: str, batch: int = 4, prompt_len: int = 32,
           gen_len: int = 16):
     from repro.configs import get_config
-    from repro.models import model as M
-    from repro.models.cache import init_cache
+    from repro.core.serving import make_decode_fn, serve_batch
 
     cfg = get_config(arch, smoke=True)
     if cfg.frontend != "tokens":
         return None
+    from repro.models import model as M
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     prompts = jax.random.randint(jax.random.PRNGKey(1),
                                  (batch, prompt_len), 0, cfg.vocab)
-    max_seq = prompt_len + gen_len
 
-    # prefill by teacher-forcing the prompt through decode steps (cache
-    # construction), then decode new tokens
-    decode = jax.jit(lambda p, b, c: M.serve_step(cfg, p, b, c))
-    cache = init_cache(cfg, batch, max_seq)
+    decode = make_decode_fn(cfg)
     t0 = time.monotonic()
-    tok = prompts[:, :1]
-    for t in range(prompt_len):
-        ids, cache = decode(params, {"tokens": prompts[:, t:t + 1]}, cache)
-    generated = []
-    tok = ids[:, None]
-    for _ in range(gen_len):
-        ids, cache = decode(params, {"tokens": tok}, cache)
-        tok = ids[:, None]
-        generated.append(ids)
-    jax.block_until_ready(ids)
+    generated, cache = serve_batch(cfg, params, prompts, gen_len,
+                                   decode=decode)
     dt = time.monotonic() - t0
     toks = batch * (prompt_len + gen_len)
     print(f"{cfg.name:24s} {toks / dt:8.1f} tok/s  "
           f"cache_pos={int(cache['pos'])}  "
-          f"sample row0: {[int(g[0]) for g in generated[:8]]}")
+          f"sample row0: {[int(t) for t in generated[0, :8]]}")
     return toks / dt
 
 

@@ -70,7 +70,8 @@ from __future__ import annotations
 import threading
 import time
 
-from repro.cluster.job import ClusterJob, JobSpec, JobState
+from repro.cluster.job import ClusterJob, JobSpec, JobState, \
+    make_cluster_job
 from repro.cluster.policy import plan_actions
 from repro.core.scaling import Busy, Phase
 from repro.sched.base import normalize_target
@@ -94,9 +95,13 @@ def enable_compile_cache(path: str) -> str:
 
 
 def default_trainer_factory(spec: JobSpec, devices: list):
-    """Build a real ElasticTrainer owning exactly ``devices`` — a whole
-    number of mp-sized groups, each one data-parallel replica of the
-    trainer's ``(data, model)`` mesh."""
+    """Build the live engine owning exactly ``devices``: a real
+    ElasticTrainer for training specs (a whole number of mp-sized groups,
+    each one data-parallel replica of the ``(data, model)`` mesh), a
+    replicated inference engine for serving-tier specs."""
+    if getattr(spec, "tier", "training") == "serving":
+        from repro.cluster.serving import make_serving_engine
+        return make_serving_engine(spec, devices)
     from repro.configs import get_config
     from repro.core import ElasticTrainer
     from repro.optim import adamw
@@ -261,7 +266,8 @@ class ClusterExecutor:
             self.compile_service is not None
         self.prefetch_limit = prefetch_limit
         self.checkpointer = checkpointer or DiskCheckpointer()
-        self.jobs = {jid: ClusterJob(jid, s) for jid, s in enumerate(specs)}
+        self.jobs = {jid: make_cluster_job(jid, s)
+                     for jid, s in enumerate(specs)}
         self.pending: list[ClusterJob] = []
         self.running: dict[int, ClusterJob] = {}
         self.checkpointing: dict[int, ClusterJob] = {}
@@ -377,9 +383,14 @@ class ClusterExecutor:
         while self._to_arrive and self._to_arrive[0].arrival <= self.now:
             job = self._to_arrive.pop(0)
             # jobs launch at their requested parallelism when it fits;
-            # otherwise they queue and the policy decides (compaction etc.)
-            if len(self.free) >= job.requested_p * job.mp:
-                self._start(job, job.requested_p)
+            # otherwise they queue and the policy decides (compaction
+            # etc.). A serving tenant admits at its CURRENT trace demand
+            # instead — its requested_p is a reservation, not an ask.
+            desired = getattr(job, "desired_p", None)
+            want = (job.feasible_p(desired(self.now))
+                    if desired is not None else job.requested_p)
+            if want >= 1 and len(self.free) >= want * job.mp:
+                self._start(job, want)
             else:
                 self.pending.append(job)
 
@@ -419,6 +430,21 @@ class ClusterExecutor:
         del self.running[job.jid]
         self._wants.pop(job.jid, None)
         job.begin_checkpoint()
+        if getattr(job, "stateless", False):
+            # stateless tenants (serving replicas) have nothing to save:
+            # skip the checkpointer, send every device home NOW, park the
+            # job re-admittable. Same state machine, zero-length
+            # CHECKPOINTING window.
+            p = job.alloc
+            freed = list(job.trainer.devices)
+            job.trainer.devices = []
+            self._return_devices(freed)
+            job.park()
+            self.pending.append(job)
+            self._event("preempt", job, p, 0, devices=freed,
+                        stateless=True)
+            self._note_recovered(job, "stateless")
+            return
         self.checkpointer.begin(job)
         self.checkpointing[job.jid] = job
         self._event("checkpoint", job, job.alloc, job.alloc)
@@ -834,9 +860,11 @@ class ClusterExecutor:
             fresh = last is not None and (
                 self.profile_ttl is None or
                 self.now - last < self.profile_ttl)
-            if fresh or job.spec.inelastic:
+            if fresh or job.spec.inelastic or \
+                    getattr(job, "tier", "training") == "serving":
                 continue    # inelastic tenants are NEVER resized, not
-                            # even transiently for a measurement
+                            # even transiently for a measurement; serving
+                            # replicas scale linearly by construction
             if job.remaining_steps <= 2 * self.profile_steps:
                 continue    # about to finish: a sweep would cost more
                             # wall-clock than its curve could ever repay
@@ -882,6 +910,13 @@ class ClusterExecutor:
                 trainer._commit_switch()
             return
         job.on_step(m, self.now)
+        if m.get("slo_breach"):
+            # serving tier: this round's tail latency blew the tenant's
+            # SLO — the under-provisioning signal reclaim priority exists
+            # to close. On the event log so ordering is testable.
+            self._event("slo_breach", job, job.alloc, job.alloc, loaned=0,
+                        p99_ms=m.get("p99_ms"), slo_ms=m.get("slo_ms"),
+                        requests=m.get("requests"))
         # free observation (EDL §5.2): every live mini-batch's measured
         # step time at the job's CURRENT shape feeds the model the
         # policies schedule from — a no-op on the analytic model
@@ -1095,4 +1130,14 @@ class ClusterExecutor:
             "jobs": [self.jobs[jid].summary() for jid in sorted(self.jobs)],
             "events": self.events,
         }
+        # serving-tier SLO accounting (absent on training-only runs)
+        serving = [j for j in self.jobs.values()
+                   if getattr(j, "tier", "training") == "serving"]
+        if serving:
+            served = sum(j.rounds_served for j in serving)
+            breaches = sum(j.slo_breaches for j in serving)
+            out["rounds_served"] = served
+            out["slo_breaches"] = breaches
+            out["slo_attainment"] = (round(1.0 - breaches / served, 4)
+                                     if served else None)
         return out

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+from typing import ClassVar
 
 
 def feasible_parallelism(global_batch: int, target: int,
@@ -66,7 +67,13 @@ class JobSpec:
     executor's ThroughputModel starts from (a MeasuredModel overrides it
     per-job as live observations and profiling sweeps land); the actual
     training workload is the (transformer) ``arch`` config.
+
+    ``tier`` distinguishes tenant classes: training specs build
+    ``ClusterJob`` + ``ElasticTrainer``; serving specs
+    (``repro.cluster.serving.ServingSpec``, tier "serving") build
+    ``ServingJob`` + a replicated inference engine.
     """
+    tier: ClassVar[str] = "training"
     name: str
     requested_p: int
     total_steps: int
@@ -123,6 +130,9 @@ class ClusterJob:
     """Executor-side state of one job. Satisfies the policy view protocol
     (jid/model/requested_p/arrival/inelastic/attained_gpu_s/alloc/
     start_time/finish_time)."""
+
+    tier = "training"      # serving tenants override (ServingJob)
+    stateless = False      # True -> park without a checkpoint
 
     def __init__(self, jid: int, spec: JobSpec):
         self.jid = jid
@@ -287,3 +297,13 @@ class ClusterJob:
             "preemptions": self.n_preemptions,
             "reshapes": self.n_reshapes,
         }
+
+
+def make_cluster_job(jid: int, spec: JobSpec) -> ClusterJob:
+    """Build the executor-side job object for ``spec``, dispatching on the
+    spec's tenant tier (lazy import: serving is optional machinery the
+    training-only paths never pay for)."""
+    if getattr(spec, "tier", "training") == "serving":
+        from repro.cluster.serving import ServingJob
+        return ServingJob(jid, spec)
+    return ClusterJob(jid, spec)

@@ -6,6 +6,7 @@ from repro.core.elastic_runtime import ElasticTrainer
 from repro.core.election import LeaderElection
 from repro.core.membership import Membership, StragglerDetector
 from repro.core.scaling import Busy, ScalingController, ScalingRecord
+from repro.core.serving import make_decode_fn, serve_batch
 from repro.core.stop_resume import checkpoint_save, checkpoint_stop, \
     resume_from_checkpoint, stop_resume_rescale, teardown_trainer
 
@@ -14,4 +15,4 @@ __all__ = ["EDLJob", "CompileService", "CompileTicket", "PRIO_COMMITTED",
            "LeaderElection", "Membership", "StragglerDetector", "Busy",
            "ScalingController", "ScalingRecord", "stop_resume_rescale",
            "checkpoint_save", "checkpoint_stop", "resume_from_checkpoint",
-           "teardown_trainer"]
+           "teardown_trainer", "make_decode_fn", "serve_batch"]

@@ -1,0 +1,60 @@
+"""The serve loop: batched prefill + decode against the KV/SSM cache.
+
+One wave = prefill a prompt batch by teacher-forcing it through
+``serve_step`` (cache construction), then autoregressively decode
+``gen_len`` new tokens. This is the unit of work a serving replica does
+per request batch; ``examples/elastic_serving.py`` and the cluster
+serving tier (``repro.cluster.serving.LiveServingEngine``) both call it,
+so the example's measured tok/s and the tier's measured wave latency are
+the same code path.
+
+jax is imported lazily so importing this module (e.g. via package
+``__init__`` chains) stays cheap in processes that never serve.
+"""
+from __future__ import annotations
+
+
+def make_decode_fn(cfg):
+    """Jitted single-step decode ``(params, batch, cache) -> (ids, cache)``
+    for a tokens-frontend config. Build once per replica and pass to
+    ``serve_batch`` so the executable is reused across waves."""
+    import jax
+
+    from repro.models import model as M
+
+    if cfg.frontend != "tokens":
+        raise ValueError(f"{cfg.name}: serving needs a tokens frontend, "
+                         f"got {cfg.frontend!r}")
+    return jax.jit(lambda p, b, c: M.serve_step(cfg, p, b, c))
+
+
+def serve_batch(cfg, params, prompts, gen_len, *, decode=None, cache=None):
+    """Serve one wave: prefill ``prompts`` ([batch, prompt_len] token ids)
+    then decode ``gen_len`` tokens. Returns ``(generated, cache)`` with
+    ``generated`` a [batch, gen_len] array of sampled ids, blocked until
+    ready so wall-clock around the call measures true wave latency."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.cache import init_cache
+
+    batch, prompt_len = prompts.shape
+    if prompt_len < 1 or gen_len < 1:
+        raise ValueError(f"need prompt_len >= 1 and gen_len >= 1, got "
+                         f"({prompt_len}, {gen_len})")
+    if decode is None:
+        decode = make_decode_fn(cfg)
+    if cache is None:
+        cache = init_cache(cfg, batch, prompt_len + gen_len)
+
+    ids = None
+    for t in range(prompt_len):
+        ids, cache = decode(params, {"tokens": prompts[:, t:t + 1]}, cache)
+    generated = []
+    tok = ids[:, None]
+    for _ in range(gen_len):
+        ids, cache = decode(params, {"tokens": tok}, cache)
+        tok = ids[:, None]
+        generated.append(ids)
+    out = jax.block_until_ready(jnp.stack(generated, axis=1))
+    return out, cache

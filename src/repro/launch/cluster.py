@@ -87,7 +87,17 @@ def parse_jobs(text: str, *, batch: int, seq: int, n_samples: int,
     tenant into deterministic elasticity: K fixed virtual workers make
     every resize the scheduler applies bitwise trajectory-preserving
     (every dp must divide K). ``default_mp`` applies to jobs without an
-    explicit ``mp=`` (the bench's --model-parallel knob)."""
+    explicit ``mp=`` (the bench's --model-parallel knob).
+
+    ``serve=TRACE`` makes the tenant a SERVING job instead (tier
+    "serving", repro.cluster.serving): TRACE is ``diurnal`` / ``spike`` /
+    ``flat`` or a literal ``/``-separated rate list; ``requested_p``
+    becomes the reserved replica count, ``total_steps`` the trace length
+    in served rounds. Serving knobs (all ``key=value`` extras): ``slo=MS``
+    (p99 SLO, default 250), ``cap=R`` (requests per replica per wave),
+    ``peak=``/``base=``/``period=`` (trace synthesis), ``min=``/``max=``
+    (replica bounds), ``arch=`` (model config; also valid on training
+    jobs)."""
     from repro.cluster.job import JobSpec
     specs = []
     for i, item in enumerate(text.split(",")):
@@ -96,6 +106,10 @@ def parse_jobs(text: str, *, batch: int, seq: int, n_samples: int,
         profile, req_p, steps, *extras = body.split(":")
         mp, mp_auto = default_mp, False
         vw: int | str = 0
+        serve = None
+        arch = None
+        trace_kw: dict = {}
+        serve_kw: dict = {}
         for extra in extras:
             key, eq, val = extra.partition("=")
             if key == "mp" and eq and val == "auto":
@@ -104,16 +118,51 @@ def parse_jobs(text: str, *, batch: int, seq: int, n_samples: int,
                 mp = int(val)
             elif key == "vw" and eq:
                 vw = val if val == "auto" else int(val)
+            elif key == "serve" and eq:
+                serve = val
+            elif key == "arch" and eq:
+                arch = val
+            elif key == "slo" and eq:
+                serve_kw["slo_ms"] = float(val)
+            elif key == "cap" and eq:
+                serve_kw["replica_capacity"] = int(val)
+            elif key == "min" and eq:
+                serve_kw["min_replicas"] = int(val)
+            elif key == "max" and eq:
+                serve_kw["max_replicas"] = int(val)
+            elif key in ("peak", "base") and eq:
+                trace_kw[key] = float(val)
+            elif key == "period" and eq:
+                trace_kw["period"] = int(val)
             else:
                 raise ValueError(
                     f"job {name!r}: unknown spec field {extra!r} "
-                    f"(supported: mp=M, mp=auto, vw=K, vw=auto)")
-        specs.append(JobSpec(
+                    f"(supported: mp=M, mp=auto, vw=K, vw=auto, arch=A, "
+                    f"serve=TRACE, slo=MS, cap=R, min=P, max=P, peak=X, "
+                    f"base=X, period=N)")
+        common = dict(
             name=name.strip(), profile=profile, requested_p=int(req_p),
             total_steps=int(steps), arrival=float(arrival or 0.0),
-            model_parallel=mp, mp_auto=mp_auto, global_batch=batch,
-            seq_len=seq, n_samples=n_samples, d_partitions=d_partitions,
-            seed=i, virtual_workers=vw))
+            global_batch=batch, seq_len=seq, n_samples=n_samples,
+            d_partitions=d_partitions, seed=i)
+        if arch is not None:
+            common["arch"] = arch
+        if serve is not None:
+            if vw or mp_auto:
+                raise ValueError(f"job {name!r}: serve= is incompatible "
+                                 f"with vw= and mp=auto")
+            from repro.cluster.serving import ServingSpec
+            from repro.sched.traffic import parse_trace
+            trace = parse_trace(serve, rounds=int(steps), **trace_kw)
+            specs.append(ServingSpec(model_parallel=mp, trace=trace,
+                                     **serve_kw, **common))
+            continue
+        if serve_kw or trace_kw:
+            bad = sorted(set(serve_kw) | set(trace_kw))
+            raise ValueError(f"job {name!r}: serving knobs {bad} need "
+                             f"serve=TRACE")
+        specs.append(JobSpec(model_parallel=mp, mp_auto=mp_auto,
+                             virtual_workers=vw, **common))
     return specs
 
 
@@ -230,6 +279,11 @@ def main(argv=None):
         policy_kw["quanta"] = tuple(
             float(q) for q in args.quanta.split(","))
     policy = make_policy(args.policy, **policy_kw)
+    if any(getattr(s, "tier", "training") == "serving" for s in specs):
+        # reclaim priority for the serving tier regardless of the base
+        # policy; a no-op wrapper around already-serving-aware policies
+        from repro.sched.serving import CrossTierPolicy
+        policy = CrossTierPolicy(policy)
     model = (MeasuredModel() if args.throughput_model == "measured"
              else AnalyticModel())
     faults = None
@@ -291,6 +345,11 @@ def main(argv=None):
               f"{stats['n_gpus_initial']} -> {stats['n_gpus']}; "
               f"{stats['recoveries']} recoveries"
               + (f" (mean latency {lat}s)" if lat is not None else ""))
+    if "slo_attainment" in stats:
+        att = stats["slo_attainment"]
+        print(f"serving: {stats['rounds_served']} round(s) served, "
+              f"{stats['slo_breaches']} SLO breach(es), p99 attainment "
+              + (f"{att:.1%}" if att is not None else "-"))
     return 0
 
 

@@ -1,12 +1,17 @@
 from repro.sched.base import MaxThroughput, StaticPolicy, alive_jobs, \
-    group_size, throughput_model_of
+    group_size, reserve_serving, serving_demand, throughput_model_of, \
+    tier_of
 from repro.sched.throughput import AnalyticModel, MeasuredModel, \
     ModelProfile, PROFILES, ThroughputModel, throughput
+from repro.sched.serving import CrossTierPolicy, serving_jobs
 from repro.sched.simulator import ClusterSimulator, Job
 from repro.sched.tiresias import ElasticTiresias, Tiresias
+from repro.sched.traffic import diurnal, flat, parse_trace, spike
 
 __all__ = ["StaticPolicy", "alive_jobs", "group_size",
-           "throughput_model_of",
+           "throughput_model_of", "tier_of", "serving_demand",
+           "reserve_serving", "CrossTierPolicy", "serving_jobs",
            "MaxThroughput", "ModelProfile", "PROFILES", "throughput",
            "ThroughputModel", "AnalyticModel", "MeasuredModel",
-           "ClusterSimulator", "Job", "Tiresias", "ElasticTiresias"]
+           "ClusterSimulator", "Job", "Tiresias", "ElasticTiresias",
+           "diurnal", "flat", "parse_trace", "spike"]

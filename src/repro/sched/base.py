@@ -178,6 +178,51 @@ def alive_jobs(view) -> list:
             if j.finish_time is None]
 
 
+def tier_of(job) -> str:
+    """"serving" for serving tenants, "training" for everything else
+    (including plain test stand-ins that predate tiers)."""
+    return str(getattr(job, "tier", "training"))
+
+
+def serving_demand(job, now) -> int:
+    """A serving tenant's instantaneous replica demand: its trace-driven
+    ``desired_p`` when it has one, else its requested floor."""
+    desired = getattr(job, "desired_p", None)
+    return int(desired(now)) if callable(desired) else int(job.requested_p)
+
+
+def reserve_serving(view, alloc: dict, *, headroom: int = 0) -> tuple:
+    """The reclaim-priority rule, shared by every serving-aware policy:
+    serving tenants are latency-bound, so their CURRENT trace demand is
+    funded before any training job sees the budget. On a demand spike
+    this is what evaporates training loans first — the training policy
+    runs on a smaller budget, its water level drops, and the executor's
+    shrink-before-grow action ordering turns the difference into
+    stop-free loan reclaims that fund the serving grants (checkpoint-park
+    only when even the floors no longer fit). On a lull the demand
+    shrinks instead, and the budget left over becomes training loans.
+
+    Mutates ``alloc`` with the serving targets (arrival order, partial
+    grants when the pool is short, ``headroom`` extra groups per tenant
+    when affordable) and returns ``(training_jobs, remaining_devices)``
+    for the training-side pass."""
+    budget = view.n_gpus
+    training = []
+    for j in sorted(alive_jobs(view), key=lambda j: (j.arrival, j.jid)):
+        if tier_of(j) != "serving":
+            training.append(j)
+            continue
+        gs = group_size(j)
+        want = serving_demand(j, view.now) + headroom
+        take = max(0, min(want, budget // gs))
+        feasible = getattr(j, "feasible_p", None)
+        if feasible is not None:
+            take = feasible(take)
+        alloc[j.jid] = take
+        budget -= take * gs
+    return training, budget
+
+
 class StaticPolicy:
     """Non-elastic baseline: FIFO admission at exactly ``requested_p``
     groups; running jobs are never resized (EDL §4.3's static-allocation
@@ -259,9 +304,12 @@ class MaxThroughput:
 
     def __call__(self, view) -> dict[int, int]:
         tm = throughput_model_of(view)
-        jobs = sorted(alive_jobs(view), key=lambda j: (j.arrival, j.jid))
         alloc: dict[int, int] = {}
-        free = view.n_gpus                  # device budget
+        # serving tier first (reclaim priority): trace demand is funded
+        # off the top; training floors + water-filling spend the rest —
+        # so a spike drains the water level (loans) before any floor
+        jobs, free = reserve_serving(view, alloc)
+        jobs.sort(key=lambda j: (j.arrival, j.jid))
         for j in jobs:
             groups = j.requested_p if j.inelastic else 1
             need = groups * group_size(j)

@@ -38,6 +38,16 @@ class Job:
     inelastic: bool = False
     mp: int = 1             # devices per group (model-parallel degree)
     mp_auto: bool = False   # policies may RESHAPE the degree live
+    # serving tier (Aryl-style): a non-empty ``trace`` makes this a
+    # serving tenant — request rates, one entry per ``trace_dt`` seconds
+    # of sim time (replayed modulo), turned into replica demand through
+    # ``replica_capacity`` (requests one replica clears per round).
+    # Serving-aware policies fund ``desired_p(now)`` before training.
+    tier: str = "training"
+    trace: tuple = ()
+    trace_dt: float = 30.0
+    replica_capacity: float = 1.0
+    min_replicas: int = 1
     # runtime state
     alloc: int = 0          # groups currently held
     remaining: float = 0.0
@@ -50,6 +60,21 @@ class Job:
         self.remaining = self.total_samples
         # the shape the demand was quoted at (``mp`` mutates on reshape)
         self.requested_mp = self.mp
+        if self.trace and self.tier == "training":
+            self.tier = "serving"
+
+    def desired_p(self, now: float) -> int:
+        """Serving-tier replica demand at sim time ``now`` (the wall
+        clock, unlike the live tier's served-rounds index — the simulator
+        has no per-tenant wave loop to count)."""
+        if not self.trace:
+            return self.requested_p
+        rate = self.trace[int(now // self.trace_dt) % len(self.trace)]
+        if self.replica_capacity <= 0:
+            raise ValueError(f"job {self.jid}: replica_capacity must be "
+                             f"> 0")
+        need = int(-(-rate // self.replica_capacity))  # ceil
+        return max(self.min_replicas, need)
 
 
 @dataclasses.dataclass

@@ -47,8 +47,8 @@ from __future__ import annotations
 
 import math
 
-from repro.sched.base import alive_jobs, best_shape, group_size, \
-    requested_devices, reshape_targets, throughput_model_of
+from repro.sched.base import best_shape, group_size, requested_devices, \
+    reserve_serving, reshape_targets, throughput_model_of
 
 
 class Tiresias:
@@ -78,11 +78,14 @@ class Tiresias:
 
     # ------------------------------------------------------------ schedule
     def __call__(self, view) -> dict[int, int]:
-        jobs = [j for j in alive_jobs(view)]
+        alloc: dict[int, int] = {}
+        # serving tenants outrank every priority group: their trace
+        # demand is latency-bound, not service-accounted, so it comes off
+        # the top (sched.base.reserve_serving — the reclaim-priority
+        # rule) and Tiresias runs its G0..Gk machinery on the remainder
+        jobs, free = reserve_serving(view, alloc)
         jobs.sort(key=lambda j: self._priority_key(view, j))
         tm = throughput_model_of(view) if self.elastic else None
-        alloc: dict[int, int] = {}
-        free = view.n_gpus
         waiting = []
         for j in jobs:
             # requested footprint is quoted in DEVICES at the SUBMITTED

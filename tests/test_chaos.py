@@ -518,3 +518,140 @@ def test_live_cluster_survives_fault_plan(tmp_path):
     assert [e for e in s["events"] if e["op"] == "recovered"]
     for j in s["jobs"]:
         assert j["steps_done"] > 0, j
+
+
+# ------------------------------------------------- serving tier under chaos
+def chaos_serving_factory(spec, devices):
+    """Tier dispatch for chaos runs: serving specs get the synthetic
+    engine (which carries the full Membership/injection surface), training
+    specs the chaos fake."""
+    if getattr(spec, "tier", "training") == "serving":
+        from repro.cluster.serving import SyntheticServingEngine
+        return SyntheticServingEngine(spec, devices)
+    return ChaosFakeTrainer(spec, devices)
+
+
+def run_chaos_serving_cluster(specs, policy, *, faults=None, rounds=60,
+                              devices=4, resched_every=2):
+    ex = ClusterExecutor(specs, policy, devices=list(range(devices)),
+                         resched_every=resched_every,
+                         trainer_factory=chaos_serving_factory,
+                         checkpointer=FakeCheckpointer(), faults=faults)
+    stats = ex.run(max_rounds=rounds)
+    return ex, stats
+
+
+def _serving_spec(name="api", steps=30, trace=None, **kw):
+    from repro.cluster.serving import ServingSpec
+    return ServingSpec(name, 1, steps, profile="resnet50",
+                       trace=trace or (12.0,) * steps, replica_capacity=4,
+                       wave_ms=20.0, **kw)
+
+
+def test_kill_serving_replica_scales_in_stop_free_then_respawns():
+    """A replica of the 3-wide serving tenant dies: the leader's liveness
+    view flags it, the executor drops exactly that replica group stop-free
+    (no park, no checkpoint), the dead device leaves the cluster, and the
+    policy respawns the tenant back to its trace demand on the surviving
+    pool."""
+    plan = FaultPlan(events=(FaultEvent("kill_worker", at=4, jid=0,
+                                        worker=2),))
+    ex, stats = run_chaos_serving_cluster([_serving_spec()],
+                                          MaxThroughput(), faults=plan)
+    api = ex.jobs[0]
+    dead = _find(stats["events"], "worker_dead", "api")
+    assert dead and dead[0]["workers"] == ["s2"] and \
+        len(dead[0]["devices"]) == 1
+    rec = _find(stats["events"], "recovered", "api")
+    assert rec and rec[0]["mode"] == "stop_free"
+    assert not _find(stats["events"], "preempt", "api")
+    kill_round = dead[0]["round"]
+    respawn = [e for e in _find(stats["events"], "scale_out", "api")
+               if e["round"] > kill_round and e["to_p"] == 3]
+    assert respawn, "demand is still 3 replicas: the policy respawns on " \
+        "the remaining pool"
+    assert api.state is JobState.FINISHED and api.rounds_served == 30
+    assert stats["workers_killed"] == 1 and stats["capacity_lost"] == 1
+    assert ex.n_gpus == 3 and stats["conserved"]
+    _assert_service_preserved(ex)
+    _assert_device_ledger(ex)
+
+
+def test_kill_sole_serving_replica_parks_stateless_and_revives():
+    """No replica survives the kill: the fallback is a STATELESS park —
+    no checkpoint is ever written — and the tenant revives on the spare
+    device with its trace position (attained rounds) intact."""
+    plan = FaultPlan(events=(FaultEvent("kill_worker", at=3, jid=0),))
+    spec = _serving_spec(steps=12, trace=(4.0,) * 12)
+    ex, stats = run_chaos_serving_cluster([spec], make_policy("static"),
+                                          faults=plan, devices=2)
+    api = ex.jobs[0]
+    pre = _find(stats["events"], "preempt", "api")
+    assert pre and pre[0].get("stateless") is True
+    assert not _find(stats["events"], "checkpoint", "api") and \
+        not ex.checkpointer.saved, "stateless: the checkpointer never runs"
+    rec = _find(stats["events"], "recovered", "api")
+    assert rec and rec[0]["mode"] == "stateless"
+    revive = [e for e in _find(stats["events"], "scale_out", "api")
+              if e["round"] > pre[0]["round"]]
+    assert revive, "the tenant revives on the spare device"
+    assert api.state is JobState.FINISHED and api.rounds_served == 12
+    assert ex.n_gpus == 1 and stats["capacity_lost"] == 1
+    assert stats["conserved"]
+    _assert_service_preserved(ex)
+    _assert_device_ledger(ex)
+
+
+def test_revoke_serving_replica_group_shrinks_stop_free():
+    """A pinned revocation against the serving tenant reclaims one
+    replica group live: the condemned device leaves the cluster at the
+    commit, the survivors keep serving, and the policy tops the tenant
+    back up to demand on what remains."""
+    plan = FaultPlan(events=(FaultEvent("revoke_devices", at=4, jid=0),))
+    ex, stats = run_chaos_serving_cluster([_serving_spec()],
+                                          MaxThroughput(), faults=plan)
+    api = ex.jobs[0]
+    rev = _find(stats["events"], "revoke", "api")
+    assert rev and len(rev[0]["devices"]) == 1
+    rec = _find(stats["events"], "recovered", "api")
+    assert rec and rec[0]["mode"] == "stop_free"
+    assert not _find(stats["events"], "preempt", "api")
+    assert api.state is JobState.FINISHED and api.rounds_served == 30
+    assert stats["devices_revoked"] == 1 and ex.n_gpus == 3
+    assert stats["conserved"]
+    _assert_service_preserved(ex)
+    _assert_device_ledger(ex)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_random_fault_schedules_keep_invariants_mixed_tiers(seed):
+    """Seeded random kill/revocation schedules against a mixed
+    serving + training pool: every cluster invariant (conservation, the
+    device ledger, attained service) must hold no matter which tier the
+    schedule hits."""
+    plan = FaultPlan.random(seed, rounds=30, n_jobs=2, kills=2,
+                            revokes=1, max_devices=1)
+    specs = [_serving_spec(steps=25,
+                           trace=(4.0, 4.0, 8.0, 8.0, 12.0, 12.0, 8.0,
+                                  8.0) * 4),
+             JobSpec("t", 2, 20, profile="resnet50")]
+    ex, stats = run_chaos_serving_cluster(specs, MaxThroughput(),
+                                          faults=plan, devices=6,
+                                          rounds=120)
+    assert stats["conserved"]
+    _assert_device_ledger(ex)
+    _assert_service_preserved(ex)
+    outcomes = {r["outcome"] for r in ex.injector.log}
+    assert outcomes <= {"fired", "partial", "dropped"}
+    api = ex.jobs[0]
+    assert api.rounds_served == api.steps_done, \
+        "every serving round on the books was actually served " \
+        "(no zero-rate entries in this trace)"
+    for job in ex.jobs.values():
+        if job.state is JobState.FINISHED:
+            assert job.steps_done == job.spec.total_steps
+        else:
+            assert job.state in (JobState.PENDING, JobState.PREEMPTED,
+                                 JobState.RUNNING)
+            assert job.steps_done <= job.spec.total_steps
+    assert ex.n_gpus == ex.n_gpus_initial - ex.capacity_lost

@@ -1,0 +1,540 @@
+"""Serving tier (Aryl-style tenancy) under SLO-aware cross-tier loaning.
+
+A ``ServingJob`` is the cluster's second tenant class: a replicated
+inference model whose replica demand is driven by a request-rate traffic
+trace and whose health metric is p99 wave latency against an SLO. The
+reclaim-priority rule (``sched.base.reserve_serving``) funds serving
+demand before any training job sees the budget, so a traffic lull loans
+idle replica groups to training and a spike evaporates those loans
+first — stop-free, via the executor's shrink-before-grow ordering.
+
+Fast tests drive the full executor loop with ``SyntheticServingEngine``
+(deterministic fixed wave latency) next to the training FakeTrainer; the
+slow test runs the real driver (LiveServingEngine serving measured
+``serve_batch`` waves) in a subprocess on forced host devices.
+"""
+import json
+import os
+import subprocess
+import sys
+import types
+
+import pytest
+
+from repro.cluster.executor import ClusterExecutor
+from repro.cluster.job import JobSpec, JobState, make_cluster_job
+from repro.cluster.policy import ScriptedPolicy, make_policy
+from repro.cluster.serving import ServingJob, ServingSpec, \
+    SyntheticServingEngine
+from repro.launch.cluster import parse_jobs
+from repro.sched.base import MaxThroughput, reserve_serving
+from repro.sched.serving import CrossTierPolicy
+from repro.sched.simulator import Job as SimJob
+from repro.sched.traffic import diurnal, flat, parse_trace, replicas_for, \
+    spike
+from test_cluster import FakeCheckpointer, FakeTrainer, _find
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+# --------------------------------------------------------------- fake layer
+def serving_factory(spec, devices):
+    """Tier dispatch mirroring the executor's default factory: serving
+    specs get the deterministic synthetic engine, training specs the
+    training fake."""
+    if getattr(spec, "tier", "training") == "serving":
+        return SyntheticServingEngine(spec, devices)
+    return FakeTrainer(spec, devices)
+
+
+def run_serving_cluster(specs, policy, *, rounds=60, devices=4,
+                        resched_every=2, checkpointer=None):
+    ex = ClusterExecutor(specs, policy, devices=list(range(devices)),
+                         resched_every=resched_every,
+                         trainer_factory=serving_factory,
+                         checkpointer=checkpointer or FakeCheckpointer())
+    stats = ex.run(max_rounds=rounds)
+    return ex, stats
+
+
+def _assert_ledger(ex):
+    """Every device is in exactly one place — asserted mid-flight, so
+    round-by-round drivers can check conservation at every step."""
+    live = sum(j.devices_held for j in ex.jobs.values())
+    assert live + len(ex.free) == ex.n_gpus, \
+        f"leak: {live} held + {len(ex.free)} free != {ex.n_gpus}"
+
+
+# --------------------------------------------------------- trace synthesis
+def test_traffic_synthesis_is_deterministic_and_bounded():
+    assert flat(5, rate=3.0) == (3.0,) * 5
+    d = diurnal(24, period=24, base=2.0, peak=10.0)
+    assert d == diurnal(24, period=24, base=2.0, peak=10.0), \
+        "synthesis is a pure function of its knobs"
+    assert d[0] == pytest.approx(2.0), "the cycle starts at the lull"
+    assert max(d) == pytest.approx(10.0) and min(d) >= 2.0 - 1e-9
+    n = diurnal(24, period=24, base=2.0, peak=10.0, noise=0.2, seed=7)
+    assert n != d and n == diurnal(24, period=24, base=2.0, peak=10.0,
+                                   noise=0.2, seed=7)
+    assert min(n) >= 0.0, "noise never drives the rate negative"
+    s = spike(10, at=3, width=2, base=1.0, peak=9.0)
+    assert s == (1.0, 1.0, 1.0, 9.0, 9.0, 1.0, 1.0, 1.0, 1.0, 1.0)
+    with pytest.raises(ValueError):
+        flat(0)
+    with pytest.raises(ValueError):
+        diurnal(8, period=1)
+    with pytest.raises(ValueError):
+        diurnal(8, base=5.0, peak=1.0)
+    with pytest.raises(ValueError):
+        spike(8, width=0)
+
+
+def test_parse_trace_literals_kinds_and_errors():
+    assert parse_trace("4/8/12", rounds=99) == (4.0, 8.0, 12.0)
+    assert parse_trace("5", rounds=99) == (5.0,), \
+        "a single number is a literal one-entry trace"
+    assert parse_trace("diurnal", rounds=8, period=4, base=1.0,
+                       peak=9.0) == diurnal(8, period=4, base=1.0,
+                                            peak=9.0)
+    assert parse_trace("flat", rounds=3, rate=2.0) == (2.0, 2.0, 2.0)
+    with pytest.raises(ValueError, match="unknown trace"):
+        parse_trace("sawtooth", rounds=8)
+
+
+def test_replicas_for_arithmetic():
+    assert replicas_for(0.0, 4) == 0
+    assert replicas_for(4.0, 4) == 1
+    assert replicas_for(4.1, 4) == 2
+    assert replicas_for(12.0, 4) == 3
+    with pytest.raises(ValueError):
+        replicas_for(1.0, 0)
+
+
+# ------------------------------------------------------------ spec + demand
+def test_serving_spec_validation_and_demand_clamps():
+    s = ServingSpec("api", 2, 20, trace=(0.0, 4.0, 9.0, 40.0),
+                    replica_capacity=4, min_replicas=1, max_replicas=3)
+    assert s.tier == "serving" and s.capacity == 4
+    assert [s.demand(k) for k in range(4)] == [1, 1, 3, 3], \
+        "ceil(rate/cap) clamped to [min, max]"
+    assert s.rate_at(5) == 4.0, "the trace replays modulo its length"
+    nocap = ServingSpec("api", 1, 5, trace=(6.0,))
+    assert nocap.capacity == nocap.global_batch, \
+        "capacity defaults to the serving batch"
+    with pytest.raises(ValueError, match="empty"):
+        ServingSpec("api", 1, 5, trace=())
+    with pytest.raises(ValueError, match="negative"):
+        ServingSpec("api", 1, 5, trace=(1.0, -2.0))
+    with pytest.raises(ValueError, match="slo_ms"):
+        ServingSpec("api", 1, 5, trace=(1.0,), slo_ms=0)
+    with pytest.raises(ValueError, match="wave_ms"):
+        ServingSpec("api", 1, 5, trace=(1.0,), wave_ms=-1)
+    with pytest.raises(ValueError, match="max_replicas"):
+        ServingSpec("api", 1, 5, trace=(1.0,), min_replicas=3,
+                    max_replicas=2)
+    with pytest.raises(ValueError, match="mp-rigid"):
+        ServingSpec("api", 1, 5, trace=(1.0,), mp_auto=True)
+    with pytest.raises(ValueError, match="virtual_workers"):
+        ServingSpec("api", 1, 5, trace=(1.0,), virtual_workers=4)
+
+
+def test_serving_job_feasible_p_is_a_pure_clamp():
+    job = make_cluster_job(0, ServingSpec("api", 1, 5, trace=(8.0,),
+                                          replica_capacity=4,
+                                          global_batch=12, max_replicas=3))
+    assert isinstance(job, ServingJob)
+    # replicas are independent: no batch-divisibility walk-down (a
+    # training job with batch 12 could never run at p=5)
+    assert [job.feasible_p(t) for t in (-1, 0, 1, 5, 99)] == [0, 0, 1, 3, 3]
+    assert job.desired_p(0.0) == 2
+
+
+# ------------------------------------------------------------ engine units
+def test_engine_wave_latency_arithmetic():
+    spec = ServingSpec("api", 1, 10, trace=(8.0, 12.0, 0.0),
+                       replica_capacity=4, wave_ms=20.0, slo_ms=50.0)
+    two = SyntheticServingEngine(spec, [0, 1])
+    m = two.step()
+    assert m["waves"] == 1 and m["p99_ms"] == 20.0 and not m["slo_breach"]
+    one = SyntheticServingEngine(spec, [0])
+    m0 = one.step()                 # rate 8, cap 4, p 1 -> 2 waves, 40 ms
+    assert m0["waves"] == 2 and m0["p99_ms"] == 40.0 \
+        and not m0["slo_breach"]
+    m1 = one.step()                 # rate 12 -> 3 waves, 60 ms > 50 SLO
+    assert m1["waves"] == 3 and m1["p99_ms"] == 60.0 and m1["slo_breach"]
+    m2 = one.step()                 # rate 0: nothing to serve, no breach
+    assert m2["waves"] == 0 and m2["p99_ms"] == 0.0 and not m2["slo_breach"]
+    assert one.throughput() == 4 and two.throughput() == 8
+
+
+def test_engine_failure_surface_partitions_whole_groups():
+    spec = ServingSpec("api", 1, 10, trace=(4.0,), replica_capacity=4,
+                       model_parallel=2)
+    eng = SyntheticServingEngine(spec, [0, 1, 2, 3])
+    assert eng.p == 2 and eng.worker_ids == ["s0", "s1"]
+    with pytest.raises(LookupError):
+        eng.inject_worker_failure("s9")
+    eng.inject_worker_failure("s0")
+    eng.step()                      # live replicas sync; the corpse doesn't
+    assert eng.membership.dead_workers(eng.step_idx) == ["s0"]
+    freed = eng.handle_failure(["s0"])
+    assert freed == [0, 1] and eng.devices == [2, 3] and eng.p == 1, \
+        "a dead replica frees exactly its mp-sized device group"
+    assert not eng.failed_workers
+    with pytest.raises(ValueError, match="no surviving replica"):
+        eng.handle_failure(["s0"])
+    with pytest.raises(AssertionError):
+        eng.release_devices(1)      # cannot release below one replica
+
+
+# ------------------------------------------------------- autoscale vs trace
+def test_autoscale_follows_the_trace():
+    """Replica count tracks the trace through the native throughput
+    policy: ramp up 1 -> 2 -> 3 replicas with the rate, back down on the
+    tail, every round within the SLO and conserved."""
+    trace = (4.0,) * 4 + (8.0,) * 4 + (12.0,) * 4 + (8.0,) * 4 + (4.0,) * 4
+    spec = ServingSpec("api", 1, len(trace), trace=trace,
+                       replica_capacity=4, wave_ms=20.0)
+    ex, stats = run_serving_cluster([spec], MaxThroughput(), rounds=60)
+    job = ex.jobs[0]
+    assert job.state is JobState.FINISHED and job.rounds_served == 20
+    peaks = [m["p"] for m in job.trainer.metrics_log]
+    assert max(peaks) == 3 and peaks[0] == 1 and peaks[-1] == 1, \
+        "replicas ramp to the crest and back to the lull"
+    assert _find(stats["events"], "scale_out", "api") and \
+        _find(stats["events"], "scale_in", "api")
+    assert stats["slo_attainment"] == 1.0 and stats["slo_breaches"] == 0
+    assert stats["rounds_served"] == 20 and stats["conserved"]
+
+
+def test_lull_loans_to_training_and_spike_reclaims_bounded():
+    """The acceptance scenario, driven round by round: during the lull
+    the trainer holds the serving tier's idle devices as a transient
+    loan; the moment the spike entry is reached, every loaned group is
+    reclaimed within a bounded number of rounds (one reschedule period
+    plus the commit round) — stop-free, conservation checked EVERY
+    round."""
+    spec = ServingSpec("api", 1, 24, trace=(4.0,) * 8 + (12.0,) * 16,
+                       replica_capacity=4, wave_ms=20.0)
+    train = JobSpec("t", 1, 500, profile="resnet50")
+    ex = ClusterExecutor([spec, train], MaxThroughput(),
+                         devices=list(range(4)), resched_every=2,
+                         trainer_factory=serving_factory,
+                         checkpointer=FakeCheckpointer())
+    api, t = ex.jobs[0], ex.jobs[1]
+    saw_loan = spike_round = reclaimed_round = None
+    for _ in range(60):
+        ex.run(max_rounds=ex.round + 1)
+        _assert_ledger(ex)          # conservation at every single round
+        if api.state is JobState.FINISHED:
+            break
+        if api.steps_done < 8:      # the lull: training holds the loan
+            if t.alloc > t.requested_p:
+                saw_loan = ex.round
+        elif spike_round is None:
+            spike_round = ex.round  # first round serving the spike rate
+        if spike_round is not None and reclaimed_round is None \
+                and api.alloc == 3 and t.alloc <= t.requested_p:
+            reclaimed_round = ex.round
+    assert saw_loan is not None, \
+        "the lull must loan idle serving capacity to training"
+    assert spike_round is not None and reclaimed_round is not None
+    bound = 2 * ex.resched_every + 1
+    assert reclaimed_round - spike_round <= bound, \
+        (f"spike at round {spike_round} must reclaim every loaned group "
+         f"within {bound} rounds; took until {reclaimed_round}")
+    # the shrink that reclaims the loan FUNDS the serving grant
+    sin = _find(ex.events, "scale_in", "t")
+    grow = [e for e in _find(ex.events, "scale_out", "api")
+            if e["to_p"] == 3]
+    assert sin and grow and ex.events.index(sin[0]) < \
+        ex.events.index(grow[0]), "shrink-before-grow: the reclaim funds " \
+        "the serving scale-out"
+    assert not _find(ex.events, "preempt", "t"), \
+        "the loan reclaim is stop-free for the trainer"
+    steps = [m["step"] for m in t.trainer.metrics_log]
+    assert steps == list(range(steps[0], steps[0] + len(steps))), \
+        "trainer step counters run straight through loan and reclaim"
+    assert api.slo_breaches == 0 and api.rounds_served == 24
+
+
+def test_slo_breach_events_stop_once_capacity_arrives():
+    """Event ordering: a scripted under-provisioned window emits
+    slo_breach events every starved round, and none after the scale-out
+    commits — the breach log is the under-provisioning signal reclaim
+    priority exists to close."""
+    spec = ServingSpec("api", 1, 20, trace=(4.0,) * 2 + (12.0,) * 18,
+                       replica_capacity=4, wave_ms=20.0, slo_ms=50.0)
+    pol = ScriptedPolicy({0: {0: 1}, 12: {0: 3}})
+    ex, stats = run_serving_cluster([spec], pol, rounds=40)
+    job = ex.jobs[0]
+    assert job.state is JobState.FINISHED
+    breaches = [e for e in stats["events"] if e["op"] == "slo_breach"]
+    assert breaches and all(e["p99_ms"] == 60.0 and e["slo_ms"] == 50.0
+                            for e in breaches), \
+        "3 waves x 20 ms at p=1 against a 50 ms SLO"
+    grow = [e for e in _find(stats["events"], "scale_out", "api")
+            if e["to_p"] == 3]
+    assert grow, "the script eventually grants the demanded replicas"
+    last_breach = max(stats["events"].index(e) for e in breaches)
+    assert last_breach < stats["events"].index(grow[0]), \
+        "no breach after the scale-out commits"
+    assert job.slo_breaches == len(breaches)
+    assert stats["slo_attainment"] == pytest.approx(
+        1.0 - len(breaches) / 20, abs=1e-4)
+    assert stats["slo_attainment"] < 1.0 and stats["conserved"]
+
+
+def test_mixed_pool_packing_mp2_serving_next_to_training():
+    """An mp=2 serving tenant and an mp=1 trainer pack the same 4-device
+    pool: the serving replica is granted as a whole 2-device group, the
+    trainer water-fills the remainder, and both tiers finish."""
+    spec = ServingSpec("api", 1, 12, trace=(6.0,) * 12, replica_capacity=6,
+                       model_parallel=2, wave_ms=20.0)
+    train = JobSpec("t", 2, 30, profile="resnet50")
+    ex, stats = run_serving_cluster([spec, train], MaxThroughput(),
+                                    rounds=80)
+    api, t = ex.jobs[0], ex.jobs[1]
+    assert api.state is JobState.FINISHED and t.state is JobState.FINISHED
+    assert all(e["mp"] == 2 for e in stats["events"]
+               if e["job"] == "api"), "serving events are in mp=2 groups"
+    assert all(m["p"] == 1 for m in api.trainer.metrics_log), \
+        "one 2-device replica serves the whole trace"
+    assert stats["slo_attainment"] == 1.0 and stats["conserved"]
+
+
+# ------------------------------------------------- stateless park + revival
+def test_stateless_park_skips_checkpointer_and_resumes_trace():
+    """Serving replicas hold no training state: a 0-replica target parks
+    the tenant WITHOUT a checkpoint (devices home the same round), and
+    re-admission resumes the trace exactly where the park left off."""
+    spec = ServingSpec("api", 1, 10, trace=(4.0,) * 4 + (8.0,) * 6,
+                       replica_capacity=4, wave_ms=20.0)
+    ckpt = FakeCheckpointer()
+    pol = ScriptedPolicy({4: {0: 0}, 10: {0: 1}})
+    ex, stats = run_serving_cluster([spec], pol, rounds=40, devices=2,
+                                    checkpointer=ckpt)
+    job = ex.jobs[0]
+    pre = _find(stats["events"], "preempt", "api")
+    assert pre and pre[0].get("stateless") is True
+    assert not _find(stats["events"], "checkpoint", "api") and \
+        not ckpt.saved, "the checkpointer is never involved"
+    assert not _find(stats["events"], "recovered", "api"), \
+        "a policy-driven park is not a fault recovery"
+    souts = _find(stats["events"], "scale_out", "api")
+    assert len(souts) == 2 and not _find(stats["events"], "readmit", "api"), \
+        "revival is a plain re-launch, not a checkpoint re-admission"
+    assert souts[1]["round"] > pre[0]["round"]
+    # the fresh engine resumed at the rounds already served: its first
+    # wave serves the POST-lull trace entry, not entry 0
+    assert job.trainer.served_offset == 4
+    assert job.trainer.metrics_log[0]["requests"] == 8.0
+    assert job.state is JobState.FINISHED and job.rounds_served == 10
+    assert job.steps_done == 10 and stats["conserved"]
+
+
+def test_scale_to_zero_lull_loans_everything_then_spike_revives():
+    """min_replicas=0 + zero-rate entries: the tenant scales to ZERO
+    (stateless park), the trainer absorbs the whole pool, and the next
+    nonzero trace entry pulls the tenant back in — parked rounds consume
+    the zero entries, so the lull cannot hold the tenant hostage."""
+    spec = ServingSpec("api", 1, 10,
+                       trace=(4.0, 4.0, 0.0, 0.0, 0.0) + (8.0,) * 5,
+                       replica_capacity=4, min_replicas=0, wave_ms=20.0)
+    train = JobSpec("t", 1, 500, profile="resnet50")
+    ex = ClusterExecutor([spec, train], MaxThroughput(),
+                         devices=list(range(4)), resched_every=2,
+                         trainer_factory=serving_factory,
+                         checkpointer=FakeCheckpointer())
+    api, t = ex.jobs[0], ex.jobs[1]
+    while api.state is not JobState.FINISHED and ex.round < 80:
+        ex.run(max_rounds=ex.round + 1)
+        _assert_ledger(ex)
+    assert api.state is JobState.FINISHED
+    pre = _find(ex.events, "preempt", "api")
+    assert pre and pre[0].get("stateless") is True, \
+        "zero demand parks the tenant stateless"
+    # with serving at zero the trainer's water level covers the pool
+    full = [e for e in _find(ex.events, "scale_out", "t")
+            if e["to_p"] == 4]
+    assert full and full[0]["loaned"] == 3, \
+        "the lull loans every serving device to training"
+    revive = [e for e in _find(ex.events, "scale_out", "api")
+              if e["round"] > pre[0]["round"]]
+    assert revive and revive[0]["to_p"] == 2, \
+        "the 8.0-rate entry revives the tenant at its spike demand"
+    sin = _find(ex.events, "scale_in", "t")
+    assert sin and ex.events.index(sin[0]) < ex.events.index(revive[0]), \
+        "the trainer's loan reclaim funds the revival"
+    assert api.steps_done == 10, "zero-rate entries are consumed while " \
+        "parked (they need no replicas)"
+    assert api.rounds_served == 7, "2 lull + 5 spike rounds actually served"
+    assert api.slo_breaches == 0
+
+
+# --------------------------------------------------- policy layer contracts
+def _view(jobs, n_gpus, now=0.0):
+    return types.SimpleNamespace(n_gpus=n_gpus, now=now,
+                                 running={}, pending=list(jobs))
+
+
+def test_reserve_serving_funds_demand_in_arrival_order():
+    a = make_cluster_job(0, ServingSpec("a", 1, 10, trace=(12.0,),
+                                        replica_capacity=4))
+    b = make_cluster_job(1, ServingSpec("b", 1, 10, trace=(8.0,),
+                                        replica_capacity=4, arrival=1.0))
+    t = make_cluster_job(2, JobSpec("t", 2, 10, arrival=0.5))
+    alloc = {}
+    training, left = reserve_serving(_view([b, t, a], 4), alloc)
+    assert alloc == {0: 3, 1: 1}, \
+        "earlier arrival is funded in full; the later one takes what's " \
+        "left (partial grant)"
+    assert training == [t] and left == 0, \
+        "training jobs pass through untouched with the remaining budget"
+    alloc = {}
+    _, left = reserve_serving(_view([a], 8), alloc, headroom=1)
+    assert alloc == {0: 4} and left == 4, \
+        "headroom grants one spare replica group when affordable"
+
+
+def test_cross_tier_policy_makes_static_serving_aware():
+    """StaticPolicy never resizes anyone; wrapped in CrossTierPolicy the
+    serving tenant still autoscales with its trace while training keeps
+    its static reservation."""
+    spec = ServingSpec("api", 1, 16, trace=(4.0,) * 2 + (12.0,) * 14,
+                       replica_capacity=4, wave_ms=20.0)
+    train = JobSpec("t", 1, 30, profile="resnet50")
+    pol = CrossTierPolicy(make_policy("static"))
+    ex, stats = run_serving_cluster([spec, train], pol, rounds=80)
+    assert stats["policy"] == "CrossTierPolicy"
+    grow = [e for e in _find(stats["events"], "scale_out", "api")
+            if e["to_p"] == 3]
+    assert grow, "the spike still scales serving out under a tier-" \
+        "unaware base policy"
+    api, t = ex.jobs[0], ex.jobs[1]
+    assert api.state is JobState.FINISHED and t.state is JobState.FINISHED
+    assert max(m["p"] for m in t.trainer.metrics_log) == 1, \
+        "static training is never resized above its reservation"
+    assert stats["slo_attainment"] == 1.0 and stats["conserved"]
+
+
+def test_elastic_tiresias_shrinks_training_for_the_spike():
+    """Serving outranks every Tiresias priority queue: the spike shrinks
+    the training tenant stop-free instead of living with breaches."""
+    spec = ServingSpec("api", 1, 16, trace=(4.0,) * 4 + (12.0,) * 12,
+                       replica_capacity=4, wave_ms=20.0, slo_ms=50.0)
+    train = JobSpec("t", 3, 400, profile="resnet50")
+    ex, stats = run_serving_cluster([spec, train],
+                                    make_policy("elastic-tiresias"),
+                                    rounds=60, devices=6)
+    api, t = ex.jobs[0], ex.jobs[1]
+    assert api.state is JobState.FINISHED
+    loans = [e for e in _find(stats["events"], "scale_out", "t")
+             if e["loaned"] > 0]
+    assert loans, "the lull loans the idle capacity to the trainer"
+    grow = [e for e in _find(stats["events"], "scale_out", "api")
+            if e["to_p"] == 3]
+    sin = _find(stats["events"], "scale_in", "t")
+    assert grow and sin and stats["events"].index(sin[0]) < \
+        stats["events"].index(grow[0])
+    assert not _find(stats["events"], "preempt", "t"), \
+        "the reclaim is stop-free, not a checkpoint park"
+    assert api.slo_breaches <= 2, \
+        "at most the reschedule lag of breaches, then capacity arrives"
+    assert stats["conserved"]
+
+
+# ----------------------------------------------------------- spec grammar
+def test_parse_jobs_serving_grammar():
+    specs = parse_jobs(
+        "api=resnet50:1:20:serve=4/8/12:cap=4:slo=90:min=1:max=3@0,"
+        "t=vgg19:2:30@1", batch=12, seq=64, n_samples=1024,
+        d_partitions=16)
+    api, t = specs
+    assert isinstance(api, ServingSpec) and api.tier == "serving"
+    assert api.trace == (4.0, 8.0, 12.0) and api.replica_capacity == 4
+    assert api.slo_ms == 90.0 and api.max_replicas == 3
+    assert api.requested_p == 1 and api.total_steps == 20
+    assert not isinstance(t, ServingSpec) and t.tier == "training"
+    assert t.requested_p == 2 and t.arrival == 1.0
+
+
+def test_parse_jobs_synthesized_trace_and_errors():
+    (api,) = parse_jobs(
+        "api=resnet50:1:16:serve=diurnal:period=8:base=2:peak=10:cap=4@0",
+        batch=12, seq=64, n_samples=1024, d_partitions=16)
+    assert api.trace == diurnal(16, period=8, base=2.0, peak=10.0), \
+        "total_steps is the synthesized trace length"
+    with pytest.raises(ValueError, match="serve=TRACE"):
+        parse_jobs("t=resnet50:1:5:slo=90@0", batch=12, seq=64,
+                   n_samples=1024, d_partitions=16)
+    with pytest.raises(ValueError, match="incompatible"):
+        parse_jobs("api=resnet50:1:5:serve=flat:vw=4@0", batch=12, seq=64,
+                   n_samples=1024, d_partitions=16)
+    with pytest.raises(ValueError, match="serve=TRACE"):
+        parse_jobs("t=resnet50:1:5:frobs=2@0", batch=12, seq=64,
+                   n_samples=1024, d_partitions=16)
+
+
+# ------------------------------------------------------- simulator serving
+def test_simulator_job_trace_demand():
+    j = SimJob(jid=0, model="resnet50", requested_p=2, total_samples=100,
+               arrival=0.0, trace=(5.0, 0.0, 11.0), trace_dt=10.0,
+               replica_capacity=4.0)
+    assert j.tier == "serving", "a trace coerces the sim tier"
+    assert j.desired_p(0.0) == 2 and j.desired_p(10.0) == 1, \
+        "zero-rate entries clamp to min_replicas"
+    assert j.desired_p(25.0) == 3 and j.desired_p(35.0) == 2, \
+        "the trace replays modulo in trace_dt buckets"
+    train = SimJob(jid=1, model="vgg19", requested_p=3, total_samples=10,
+                   arrival=0.0)
+    assert train.tier == "training" and train.desired_p(0.0) == 3
+
+
+# ----------------------------------------------------------- live (slow)
+@pytest.mark.slow
+def test_live_serving_loans_and_reclaims_stop_free():
+    """The real driver: one LiveServingEngine tenant (measured
+    serve_batch waves) next to a real elastic trainer on 4 forced host
+    devices. The lull loans devices to training, the spike reclaims them
+    with the trainer never parked and its step counter continuous.
+
+    The spike window is 24 rounds wide: the trainer's shrink is deferred
+    while its background prep (XLA compile of the wider context) is in
+    flight, so a narrow spike can close before the reclaim commits."""
+    trace = "/".join(["4"] * 8 + ["16"] * 24 + ["4"] * 8)
+    cmd = [sys.executable, "-m", "repro.launch.cluster", "--json",
+           "--devices", "4", "--policy", "throughput",
+           "--jobs",
+           f"api=resnet50:1:40:serve={trace}:cap=4:max=3:slo=60000@0,"
+           f"t=resnet50:1:100@0",
+           "--max-rounds", "400"]
+    env = {**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")}
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                         cwd=ROOT, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    s = json.loads(out.stdout.strip().splitlines()[-1])
+    assert s["conserved"] is True
+    assert s["rounds_served"] == 40 and s["slo_attainment"] == 1.0, \
+        "a 60 s SLO holds trivially on smoke models — breaches here " \
+        "mean the accounting broke, not the hardware"
+    jobs = {j["name"]: j for j in s["jobs"]}
+    assert jobs["api"]["tier"] == "serving"
+    assert jobs["api"]["state"] == "finished"
+    loans = [e for e in s["events"]
+             if e["op"] == "scale_out" and e["job"] == "t"
+             and e["loaned"] > 0]
+    assert loans, "the lull must loan serving capacity to the trainer"
+    reclaims = [e for e in s["events"]
+                if e["op"] == "scale_in" and e["job"] == "t"]
+    assert reclaims, "the spike must reclaim the loan"
+    spike_grow = [e for e in s["events"]
+                  if e["op"] == "scale_out" and e["job"] == "api"
+                  and e["to_p"] == 3]
+    assert spike_grow, "serving scales to its (capped) spike demand"
+    assert not [e for e in s["events"]
+                if e["op"] == "preempt" and e["job"] == "t"], \
+        "loan and reclaim are stop-free for the trainer"
+    assert jobs["t"]["steps_done"] == jobs["t"]["final_step"], \
+        "trainer step counters are continuous (no replay, no reset)"
