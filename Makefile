@@ -3,7 +3,7 @@ PY ?= python
 
 .PHONY: test test-fast test-chaos docs-check cluster-demo bench-cluster \
 	bench-smoke bench-reshape bench-reshape-det bench-chaos bench-overhead \
-	bench-serving
+	bench-serving bench-obs
 
 # the tier-1 command: full suite, fail fast
 test:
@@ -78,3 +78,9 @@ bench-chaos:
 	  --policies throughput \
 	  --jobs "a=vgg19:2:16@0,b=resnet50:1:16@0" --max-rounds 200 \
 	  --faults "random:seed=0,kills=1,revokes=1,rounds=10"
+
+# telemetry-overhead budget: the full observability layer (bus + tracing
+# + per-round metrics sampling) must cost under 2% of the round loop;
+# lands in experiments/bench_obs.json; runs in CI
+bench-obs:
+	PYTHONPATH=src $(PY) benchmarks/obs_bench.py

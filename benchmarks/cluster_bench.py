@@ -339,6 +339,11 @@ def main():
                     help="requests one replica serves per wave")
     ap.add_argument("--serving-slo", type=float, default=250.0,
                     metavar="MS")
+    ap.add_argument("--report", action="store_true",
+                    help="attach the observability layer (repro.obs) to "
+                         "each policy run and print its per-job timeline "
+                         "+ adjustment-latency summary (the same renderer "
+                         "as tools/obs_report.py)")
     ap.add_argument("--max-rounds", type=int, default=300)
     ap.add_argument("--compile-cache", default=None, metavar="DIR")
     args = ap.parse_args()
@@ -363,14 +368,23 @@ def main():
                            d_partitions=16, default_mp=args.model_parallel)
         model = (MeasuredModel() if args.throughput_model == "measured"
                  else AnalyticModel())
+        obs = None
+        if args.report:
+            from repro.obs import Observability
+            obs = Observability()
         t0 = time.monotonic()
         ex = ClusterExecutor(specs, make_policy(name),
                              throughput_model=model,
                              profile_sweeps=args.profile_sweeps,
-                             compile_cache=args.compile_cache)
+                             compile_cache=args.compile_cache, obs=obs)
         stats = ex.run(max_rounds=args.max_rounds)
         ex.close()
         wall = time.monotonic() - t0
+        if obs is not None:
+            from repro.obs import report as obs_report
+            obs.close()
+            print(f"--- obs report: policy {name} ---")
+            print(obs_report.render(obs.records()))
         jct = stats["mean_jct"]     # None when nothing finished in budget
         results[name] = {"mean_jct": jct,
                          "makespan": stats["makespan"],

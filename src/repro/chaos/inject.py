@@ -29,6 +29,10 @@ class FaultInjector:
     def _record(self, ex, event: FaultEvent, outcome: str, **extra):
         self.log.append({"round": ex.round, "outcome": outcome,
                          "event": event.to_dict(), **extra})
+        obs = getattr(ex, "obs", None)
+        if obs is not None:
+            obs.on_fault(ex, f"inject_{event.kind}", outcome=outcome,
+                         **extra, plan_event=event.to_dict())
 
     def _target_job(self, ex, event: FaultEvent):
         """Resolve the event's target among RUNNING jobs. None = not

@@ -211,7 +211,15 @@ class ClusterExecutor:
                  profile_sweeps: bool = False, profile_steps: int = 3,
                  profile_ttl: float | None = None,
                  compile_cache: str | None = None,
-                 faults=None, ckpt_max_retries: int = 3):
+                 faults=None, ckpt_max_retries: int = 3,
+                 obs=None):
+        # set FIRST: close()/__del__ must be safe even if construction
+        # fails partway (e.g. the infeasible-mp ValueError below)
+        self._closed = False
+        # observability facade (repro.obs.Observability): every legacy
+        # event is mirrored onto its typed bus, committed switches become
+        # span trees, and the round loop drives its metrics sampling
+        self.obs = obs
         if compile_cache:
             enable_compile_cache(compile_cache)
         if devices is None:
@@ -262,6 +270,9 @@ class ClusterExecutor:
         else:
             from repro.core.compile_service import CompileService
             self.compile_service = CompileService(workers=compile_workers)
+        if self.obs is not None and self.compile_service is not None \
+                and self.compile_service.on_event is None:
+            self.compile_service.on_event = self.obs.on_compile_event
         self.prefetch_shapes = prefetch_shapes and \
             self.compile_service is not None
         self.prefetch_limit = prefetch_limit
@@ -307,18 +318,31 @@ class ClusterExecutor:
         return float(self.round)
 
     # ------------------------------------------------------------- events
-    def _event(self, op: str, job: ClusterJob, from_p: int, to_p: int,
-               devices=None, loaned: int | None = None, **extra):
+    def _event(self, op: str, job: ClusterJob | None, from_p: int,
+               to_p: int, devices=None, loaned: int | None = None,
+               mp: int | None = None, **extra):
+        """Log one allocation event. ``job=None`` is a pool-level event
+        (e.g. a free-pool revocation) and must pass ``mp`` explicitly —
+        EVERY event carries the event-time mp so mixed-mp loan accounting
+        (``stats()["max_loaned"]``) converts groups to devices exactly,
+        never through a silent default."""
+        if mp is None:
+            mp = job.mp         # from_p/to_p/loaned are GROUP counts
+        if loaned is None:
+            loaned = max(0, to_p - job.requested_p) if job is not None else 0
         e = {
-            "round": self.round, "op": op, "job": job.spec.name,
-            "jid": job.jid, "from_p": from_p, "to_p": to_p,
-            "mp": job.mp,       # from_p/to_p/loaned are GROUP counts
-            "loaned": (max(0, to_p - job.requested_p)
-                       if loaned is None else loaned)}
+            "round": self.round, "op": op,
+            "job": job.spec.name if job is not None else None,
+            "jid": job.jid if job is not None else None,
+            "from_p": from_p, "to_p": to_p, "mp": mp, "loaned": loaned}
         if devices is not None:
             e["devices"] = [getattr(d, "id", d) for d in devices]
+        if job is not None and getattr(job, "tier", "training") == "serving":
+            e.setdefault("tier", "serving")
         e.update(extra)
         self.events.append(e)
+        if self.obs is not None:
+            self.obs.on_executor_event(e)
 
     @staticmethod
     def _dev_id(d):
@@ -354,6 +378,12 @@ class ClusterExecutor:
         job._fault_t0 = None
         lat = time.monotonic() - t0
         self.recovery_latencies.append(lat)
+        if self.obs is not None:
+            # t0 and the tracer share the monotonic clock: the span IS
+            # the recovery-latency window, not a re-measurement of it
+            self.obs.tracer.add_span("recovery", t0, time.monotonic(),
+                                     tid=job.spec.name, cat="fault",
+                                     mode=mode)
         self._event("recovered", job, job.alloc, job.alloc, loaned=0,
                     mode=mode, latency_s=round(lat, 4))
 
@@ -411,6 +441,16 @@ class ClusterExecutor:
             # route this trainer's background preps through the shared
             # priority queue (fakes simply never read the attribute)
             trainer.compile_service = self.compile_service
+        if self.obs is not None:
+            self.obs.on_queue_wait(self.now - job.arrival)
+            ctrl = getattr(trainer, "controller", None)
+            if isinstance(getattr(ctrl, "listeners", None), list):
+                # every committed switch of this trainer becomes a span
+                # tree + latency observations (plain protocol fakes and
+                # serving engines have no listener surface: skipped)
+                ctrl.listeners.append(
+                    lambda rec, job=job:
+                        self.obs.on_adjustment(self, job, rec))
         if job in self.pending:
             self.pending.remove(job)
         readmit = job.checkpoint is not None
@@ -445,6 +485,7 @@ class ClusterExecutor:
                         stateless=True)
             self._note_recovered(job, "stateless")
             return
+        job._ckpt_t0 = time.monotonic()
         self.checkpointer.begin(job)
         self.checkpointing[job.jid] = job
         self._event("checkpoint", job, job.alloc, job.alloc)
@@ -488,6 +529,15 @@ class ClusterExecutor:
         p = job.alloc
         freed = self.checkpointer.teardown(job)
         self._return_devices(freed)
+        t0 = getattr(job, "_ckpt_t0", None)
+        if self.obs is not None and t0 is not None:
+            # begin -> landed, retries included (the save's full shadow)
+            self.obs.tracer.add_span("checkpoint_save", t0,
+                                     time.monotonic(), tid=job.spec.name,
+                                     cat="checkpoint",
+                                     retries=self._ckpt_retries.get(
+                                         job.jid, 0))
+        job._ckpt_t0 = None
         self._ckpt_retries.pop(job.jid, None)
         job.park()
         del self.checkpointing[job.jid]
@@ -773,11 +823,8 @@ class ClusterExecutor:
             self.capacity_lost += grab
             self.devices_revoked += grab
             taken += grab
-            self.events.append({
-                "round": self.round, "op": "revoke", "job": None,
-                "jid": None, "from_p": 0, "to_p": 0, "mp": 1, "loaned": 0,
-                "devices": [self._dev_id(d) for d in devs],
-                "source": "free_pool"})
+            self._event("revoke", None, 0, 0, devices=devs, loaned=0,
+                        mp=1, source="free_pool")
         while taken < n_devices:
             victims = [j for j in self.running.values()
                        if (jid is None or j.jid == jid)
@@ -883,6 +930,11 @@ class ClusterExecutor:
             except (Busy, ValueError):
                 self.free = devs + self.free
                 continue
+            # ownership transferred: on the event log like any grant, so
+            # replay auditors see the sweep's devices granted before the
+            # sweep's scale-in steps free them (or, on an aborted sweep,
+            # before the next rebalance reclaims the leftover loan)
+            self._event("profile_grant", job, cur, max_p, devices=devs)
             trainer.wait_for_scaling()
             try:
                 table = profile(trainer, cur, max_p,
@@ -998,6 +1050,8 @@ class ClusterExecutor:
                 if not self.running and self.checkpointing:
                     self._await_checkpoint()
                 self._assert_conserved()
+                if self.obs is not None:
+                    self.obs.sample(self)
                 self._prep_yield()
                 self.round += 1
         except BaseException:
@@ -1054,8 +1108,15 @@ class ClusterExecutor:
                 if t is not None and t.is_alive():
                     t.join(timeout=120)
         if self.compile_service is not None:
-            for jid in list(self.jobs):
-                self.compile_service.cancel_owner(("spec", jid))
+            for jid, job in list(self.jobs.items()):
+                # only jobs with no future stop speculating (_finish
+                # already cancelled finished jobs' tickets); a live job's
+                # pending prefetches build during the drain instead —
+                # their handles land in the exec cache and run() is
+                # re-enterable, so cancelling them would race the loop
+                # exit against the worker pool and discard queued work
+                if job.finish_time is not None or job.trainer is None:
+                    self.compile_service.cancel_owner(("spec", jid))
             self.compile_service.drain(120)
 
     def _drain_checkpoints(self):
@@ -1075,7 +1136,15 @@ class ClusterExecutor:
         again nothing can ever re-admit a parked job — without this, runs
         ending with PREEMPTED jobs (or max_rounds exhaustion) leak
         full-model state dumps in the checkpoint root. run() itself stays
-        re-enterable; call close() only when done with the executor."""
+        re-enterable; call close() only when done with the executor.
+
+        Idempotent: a second call (an explicit close followed by
+        ``__del__``/atexit, or error-path cleanup after a failed run)
+        returns immediately instead of re-draining the compile-service
+        threads."""
+        if self._closed:
+            return
+        self._closed = True
         if self.compile_service is not None:
             self.compile_service.shutdown()
         discard = getattr(self.checkpointer, "discard", None)
@@ -1084,6 +1153,14 @@ class ClusterExecutor:
         for job in self.jobs.values():
             if job.checkpoint is not None:
                 discard(job)
+
+    def __del__(self):
+        # best-effort last-resort cleanup; anything can be missing at
+        # interpreter shutdown (half-built executor, torn-down modules)
+        try:
+            self.close()
+        except BaseException:
+            pass
 
     # ------------------------------------------------------------- results
     def stats(self) -> dict:
@@ -1101,8 +1178,11 @@ class ClusterExecutor:
             "makespan": max((j.finish_time for j in self.finished),
                             default=None),
             # event "loaned" is in groups; the stat reports peak DEVICES on
-            # loan so mixed-mp loans compare in one unit
-            "max_loaned": max((e["loaned"] * e.get("mp", 1)
+            # loan so mixed-mp loans compare in one unit. Every event
+            # carries its event-time mp (_event enforces it), so this is a
+            # strict lookup — a silent mp=1 default would under-count an
+            # mp>1 tenant's loan
+            "max_loaned": max((e["loaned"] * e["mp"]
                                for e in self.events), default=0),
             "preemptions": sum(1 for e in self.events
                                if e["op"] == "preempt"),

@@ -108,9 +108,16 @@ class CompileTicket:
 class CompileService:
     """Bounded worker pool draining a priority heap of compile tickets."""
 
-    def __init__(self, workers: int = 2, name: str = "compile"):
+    def __init__(self, workers: int = 2, name: str = "compile",
+                 on_event=None):
         self.workers = max(1, int(workers))
         self.name = name
+        # observability hook: ``on_event(transition, ticket)`` for every
+        # ticket state change (submitted / deduped / escalated / running /
+        # done / failed / cancelled). Always fired OUTSIDE the service
+        # lock — sinks take their own locks — and never allowed to break
+        # the compile pipeline.
+        self.on_event = on_event
         self._lock = threading.Lock()
         self._work = threading.Condition(self._lock)
         self._heap: list = []           # (priority, seq, ticket)
@@ -128,6 +135,16 @@ class CompileService:
         self.deduped = 0                # submits answered by a live ticket
         self.escalated = 0              # speculative -> committed promotions
 
+    def _notify(self, transition: str, ticket):
+        """Fire the observability hook; failures are contained (a broken
+        sink must not kill a compile worker or the submitting trainer)."""
+        if self.on_event is None:
+            return
+        try:
+            self.on_event(transition, ticket)
+        except Exception:
+            pass
+
     # ------------------------------------------------------------- submit
     def submit(self, key, fn, *, priority: int = PRIO_SPECULATIVE,
                owner=None) -> CompileTicket:
@@ -140,21 +157,27 @@ class CompileService:
             live = self._by_key.get(key)
             if live is not None and live.state in (PENDING, RUNNING):
                 self.deduped += 1
-                if priority < live.priority:
+                escalate = priority < live.priority
+                if escalate:
                     live.priority = priority
                     live.speculative = False
                     self.escalated += 1
                     if live.state == PENDING:   # re-rank (lazy deletion:
                         heapq.heappush(         # stale entry skipped on pop)
                             self._heap, (priority, next(self._seq), live))
-                return live
-            t = CompileTicket(key, fn, priority, owner)
-            self._by_key[key] = t
-            self.submitted += 1
-            heapq.heappush(self._heap, (priority, next(self._seq), t))
-            self._spawn_if_needed()
-            self._work.notify()
-            return t
+            else:
+                live, escalate = None, False
+                t = CompileTicket(key, fn, priority, owner)
+                self._by_key[key] = t
+                self.submitted += 1
+                heapq.heappush(self._heap, (priority, next(self._seq), t))
+                self._spawn_if_needed()
+                self._work.notify()
+        if live is not None:
+            self._notify("escalated" if escalate else "deduped", live)
+            return live
+        self._notify("submitted", t)
+        return t
 
     def _spawn_if_needed(self):
         # lazy pool: threads appear with demand, capped at ``workers``
@@ -177,6 +200,7 @@ class CompileService:
             del self._by_key[key]
             self.cancelled += 1
         t._settle(CANCELLED)
+        self._notify("cancelled", t)
         return True
 
     def cancel_owner(self, owner, *, keep=frozenset()) -> int:
@@ -214,6 +238,7 @@ class CompileService:
                     self._work.wait()
                 ticket.state = RUNNING
                 self._running += 1
+            self._notify("running", ticket)
             try:
                 ticket.value = ticket.fn()
                 ok = True
@@ -227,6 +252,7 @@ class CompileService:
                 self.compiled += ok
                 self.failed += not ok
             ticket._settle(DONE if ok else FAILED)
+            self._notify("done" if ok else "failed", ticket)
 
     # ---------------------------------------------------------- lifecycle
     def drain(self, timeout: float = 120.0) -> bool:

@@ -619,6 +619,7 @@ class ElasticTrainer:
         move)."""
         if plan.staged_state is not None:
             return
+        plan.record.t_stage_start = self.controller.clock()
         handle: ExecHandle = plan.exec_handle
         if plan.record.op == "reshape":
             from repro.reshape import StateSpec, apply_plan, plan_reshard
@@ -635,6 +636,7 @@ class ElasticTrainer:
             staged = jax.device_put(self.state, handle.state_shardings)
         plan.staged_state = staged
         plan.staged_from = self.state
+        plan.record.t_stage_end = self.controller.clock()
 
     def _commit_switch(self):
         """The brief stop: reshard state (model broadcast) + swap topology."""

@@ -57,6 +57,11 @@ class ScalingRecord:
     # (overlapped with the draining mini-batch); 0 = the whole state move
     # ran inside the stop
     bytes_moved_overlapped: int = 0
+    # staged-reshard window (overlapped state move issued by the draining
+    # mini-batch, see elastic_runtime._stage_switch); both 0.0 when the
+    # switch took the in-stop move instead
+    t_stage_start: float = 0.0
+    t_stage_end: float = 0.0
 
     @property
     def prep_time(self) -> float:
@@ -87,6 +92,8 @@ class ScalingRecord:
                        reshard_bytes_moved=self.reshard_bytes_moved,
                        reshard_bytes_kept=self.reshard_bytes_kept,
                        bytes_moved_overlapped=self.bytes_moved_overlapped)
+        if self.t_stage_end > 0.0:
+            out["stage_s"] = round(self.t_stage_end - self.t_stage_start, 4)
         return out
 
 
@@ -122,6 +129,10 @@ class ScalingController:
         self.phase = Phase.IDLE
         self.plan: SwitchPlan | None = None
         self.history: list[ScalingRecord] = []
+        # observability hooks fired with the finished record at complete()
+        # — AFTER the controller is back to IDLE, so a listener that
+        # inspects (or even requests) scaling sees a consistent machine
+        self.listeners: list = []
 
     def admit(self, op: str, from_p: int, to_p: int) -> SwitchPlan:
         if self.phase is not Phase.IDLE:
@@ -151,6 +162,8 @@ class ScalingController:
         self.history.append(rec)
         self.plan = None
         self.phase = Phase.IDLE
+        for fn in list(self.listeners):
+            fn(rec)
         return rec
 
     def abort(self):

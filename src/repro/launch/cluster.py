@@ -252,6 +252,21 @@ def main(argv=None):
                          "a FaultPlan JSON trace file, or an inline "
                          "'random:seed=0,kills=1,revokes=1,rounds=40' "
                          "spec (repro.chaos)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome-trace-event JSON of every "
+                         "committed adjustment's span tree (plan/prep/"
+                         "drain/stop-window), checkpoint save and fault "
+                         "recovery — load it in chrome://tracing or "
+                         "https://ui.perfetto.dev")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the run's telemetry stream as JSONL: "
+                         "every typed bus event plus periodic metric "
+                         "snapshots (validate/render it with "
+                         "tools/obs_report.py)")
+    ap.add_argument("--prom-port", type=int, default=None, metavar="PORT",
+                    help="serve the metrics registry as Prometheus text "
+                         "on 127.0.0.1:PORT while the run is live "
+                         "(stdlib HTTP; 0 picks an ephemeral port)")
     ap.add_argument("--devices", type=int, default=_N_DEV)
     ap.add_argument("--batch", type=int, default=12)
     ap.add_argument("--seq", type=int, default=64)
@@ -290,6 +305,15 @@ def main(argv=None):
     if args.faults:
         from repro.chaos import FaultPlan
         faults = FaultPlan.parse(args.faults)
+    obs = None
+    if args.trace_out or args.metrics_out or args.prom_port is not None:
+        from repro.obs import Observability
+        obs = Observability(telemetry_out=args.metrics_out,
+                            trace_out=args.trace_out,
+                            prom_port=args.prom_port)
+        if obs.prom_port is not None and not args.json:
+            print(f"metrics: http://127.0.0.1:{obs.prom_port}/metrics",
+                  file=sys.stderr)
     t0 = time.monotonic()
     ex = ClusterExecutor(specs, policy, resched_every=args.resched_every,
                          throughput_model=model,
@@ -299,10 +323,22 @@ def main(argv=None):
                          prefetch_shapes=args.prefetch_shapes,
                          compile_workers=args.compile_workers,
                          serialize_prep=args.serialize_prep or None,
-                         faults=faults)
-    stats = ex.run(max_rounds=args.max_rounds)
+                         faults=faults, obs=obs)
+    try:
+        stats = ex.run(max_rounds=args.max_rounds)
+    finally:
+        ex.close()  # drop parked-job checkpoint state (unreachable now)
+        if obs is not None:
+            obs.close()     # flush telemetry + export the trace
     stats["wall_s"] = round(time.monotonic() - t0, 2)
-    ex.close()      # drop parked-job checkpoint state (unreachable now)
+    if obs is not None and not args.json:
+        if args.trace_out:
+            print(f"trace written to {args.trace_out} "
+                  f"(open in chrome://tracing or ui.perfetto.dev)",
+                  file=sys.stderr)
+        if args.metrics_out:
+            print(f"telemetry written to {args.metrics_out} "
+                  f"({obs.bus.emitted} event(s))", file=sys.stderr)
 
     if args.json:
         print(json.dumps(stats))

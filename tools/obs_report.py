@@ -1,0 +1,49 @@
+#!/usr/bin/env python
+"""Validate / render a run's telemetry stream (``--metrics-out`` JSONL).
+
+  PYTHONPATH=src python tools/obs_report.py telemetry.jsonl
+  PYTHONPATH=src python tools/obs_report.py --validate telemetry.jsonl
+
+``--validate`` checks every record against the event schema
+(repro.obs.events.SCHEMA_VERSION) and exits nonzero listing every
+problem — the CI obs smoke step gates on it. Without it, prints the
+per-job timeline + adjustment-latency summary (repro.obs.report), the
+same surface ``cluster_bench --report`` uses.
+"""
+import argparse
+import os
+import sys
+
+# runnable from the repo root without PYTHONPATH too
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.obs import report  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path", help="telemetry JSONL (--metrics-out file)")
+    ap.add_argument("--validate", action="store_true",
+                    help="schema-check every record instead of rendering; "
+                         "exit 1 listing every violation")
+    args = ap.parse_args(argv)
+
+    records = report.load(args.path)
+    if args.validate:
+        problems = report.validate(records)
+        if problems:
+            print(f"{args.path}: {len(problems)} schema violation(s):")
+            for p in problems:
+                print(f"  {p}")
+            return 1
+        n_events = sum(1 for r in records if r.get("type") == "event")
+        n_metrics = sum(1 for r in records if r.get("type") == "metrics")
+        print(f"{args.path}: OK — {n_events} event(s), {n_metrics} metric "
+              f"snapshot(s), all schema v-valid")
+        return 0
+    print(report.render(records))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
